@@ -1,0 +1,39 @@
+"""[Paper Fig 2] Motivation: (a) rollout dominates the co-located step;
+(b) rollout scales near-linearly with more independent instances."""
+
+import json
+from pathlib import Path
+
+from repro.core import trace as tr
+from benchmarks.common import MODELS, PAPER_WORKLOAD, emit, run_system
+
+OUT = Path("experiments/bench")
+
+
+def main(quick: bool = False):
+    OUT.mkdir(parents=True, exist_ok=True)
+    out = {}
+    models = ["qwen3-14b"] if quick else list(MODELS)
+    for model in models:
+        r = run_system("veRL", model, tr.constant_trace(0), n_steps=2, seed=7)
+        m = r["metrics"][-1]
+        train = m["t_train"]
+        rollout = m["step_time"] - train
+        frac = rollout / m["step_time"]
+        out[model] = dict(rollout_frac=frac, step_time=m["step_time"])
+        emit(f"fig2a/{model}/rollout_frac", frac, m["step_time"])
+    # (b) rollout scaling: generation throughput vs instance count
+    base = None
+    for n in [2, 4, 8, 16]:
+        r = run_system("RLBoost", "qwen3-14b", tr.constant_trace(n),
+                       n_steps=2, seed=7, t_seed_init=0.0)
+        thpt = r["throughput"]
+        if base is None:
+            base = thpt / 2
+        out[f"scale_{n}"] = thpt
+        emit(f"fig2b/instances={n}", thpt, thpt / base / n)
+    (OUT / "motivation.json").write_text(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""[Paper Fig 13] Relative throughput / cost-efficiency of RLBoost vs veRL
+on Qwen3-14B under different maximum response lengths (5K..14K)."""
+
+import json
+from pathlib import Path
+
+from repro.core import trace as tr
+from benchmarks.common import PAPER_WORKLOAD, emit, run_system
+
+OUT = Path("experiments/bench")
+
+
+def main(quick: bool = False):
+    OUT.mkdir(parents=True, exist_ok=True)
+    lens = [5120, 8192, 14336] if quick else [5120, 8192, 11264, 14336]
+    n_steps = 2 if quick else 4
+    results = []
+    for max_len in lens:
+        wl = dict(PAPER_WORKLOAD)
+        wl["max_response"] = max_len
+        wl["mean_response"] = max_len * 0.3
+        v = run_system("veRL", "qwen3-14b", tr.constant_trace(0),
+                       n_steps=n_steps, seed=4, workload=wl)
+        b = run_system("RLBoost", "qwen3-14b", tr.constant_trace(16),
+                       n_steps=n_steps, seed=4, workload=wl)
+        n_used = b["metrics"][-1]["n_remote"]
+        v.pop("metrics"); b.pop("metrics")
+        rel_t = b["throughput"] / v["throughput"]
+        rel_c = b["tokens_per_dollar"] / v["tokens_per_dollar"]
+        results.append(dict(max_len=max_len, rel_throughput=rel_t,
+                            rel_cost_eff=rel_c, n_prem_used=n_used))
+        emit(f"fig13/max_len={max_len}", rel_t, rel_c, n_used)
+    (OUT / "response_length.json").write_text(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

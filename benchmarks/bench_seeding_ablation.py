@@ -1,0 +1,60 @@
+"""[Paper Fig 12] Adaptive rollout offload ablation on Qwen3-14B:
+full Algorithm 1 vs no-scheduler-memory vs no-seeding, under a scenario
+where 5 of 6 instances are preempted and substitutes return gradually."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import trace as tr
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import model_perf_from_cfg
+from benchmarks.common import PAPER_WORKLOAD, emit
+
+OUT = Path("experiments/bench")
+
+
+def scenario(duration):
+    # 6 instances; 5 preempted immediately; substitutes return over time
+    ev = [(0.0, 6)] + [(1.0, -1)] * 5
+    gaps = [600.0, 1100.0, 1500.0, 1900.0, 2300.0]
+    ev += [(t, +1) for t in gaps]
+    return tr.step_trace(ev)
+
+
+def run(variant: str, n_steps: int):
+    cfg_m = get_config("qwen3-14b")
+    perf = model_perf_from_cfg(cfg_m)
+    rc = RunnerConfig(mode="rlboost", seed=3, **PAPER_WORKLOAD)
+    runner = HybridRunner(rc, perf, model_cfg=cfg_m)
+    if variant == "no_seeding":
+        runner.scheduler.enabled = False
+        runner.scheduler.t_seed = 0.0
+    elif variant == "no_memory":
+        runner.scheduler.use_memory = False
+    runner.load_trace(scenario(None))
+    metrics = runner.run(n_steps=n_steps)
+    return metrics
+
+
+def main(quick: bool = False):
+    OUT.mkdir(parents=True, exist_ok=True)
+    n_steps = 3 if quick else 6
+    out = {}
+    base = None
+    for variant in ["full", "no_memory", "no_seeding"]:
+        m = run(variant, n_steps)
+        thpt = float(np.mean([x["throughput"] for x in m]))
+        out[variant] = dict(throughput=thpt,
+                            per_step=[x["throughput"] for x in m],
+                            t_seed=[x["t_seed"] for x in m])
+        if base is None:
+            base = thpt
+        emit(f"fig12/{variant}", thpt, thpt / base)
+    (OUT / "seeding_ablation.json").write_text(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

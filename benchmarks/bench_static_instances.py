@@ -1,0 +1,35 @@
+"""[Paper Fig 11] Qwen3-14B throughput / cost-efficiency vs a static number
+of preemptible rollout instances (0 = colocated fallback)."""
+
+import json
+from pathlib import Path
+
+from repro.core import trace as tr
+from benchmarks.common import emit, run_system
+
+OUT = Path("experiments/bench")
+
+
+def main(quick: bool = False):
+    OUT.mkdir(parents=True, exist_ok=True)
+    counts = [0, 1, 2, 4, 6, 8] if not quick else [0, 2, 6]
+    n_steps = 3 if quick else 5
+    results = []
+    base = None
+    for n in counts:
+        system = "veRL" if n == 0 else "RLBoost"
+        r = run_system(system, "qwen3-14b", tr.constant_trace(n),
+                       n_steps=n_steps, seed=2)
+        r.pop("metrics")
+        r["n_instances"] = n
+        results.append(r)
+        if base is None:
+            base = r
+        emit(f"fig11/qwen3-14b/n={n}", r["throughput"],
+             r["throughput"] / base["throughput"],
+             r["tokens_per_dollar"] / base["tokens_per_dollar"])
+    (OUT / "static_instances.json").write_text(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""[Paper Fig 8/9/10] Throughput + cost efficiency over spot-trace segments
+A/B/C for Qwen3-8B/14B/32B under veRL / veRL.2x / Disagg.BAL / RLBoost."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import trace as tr
+from benchmarks.common import MODELS, emit, run_system
+
+OUT = Path("experiments/bench")
+
+
+def main(quick: bool = False):
+    OUT.mkdir(parents=True, exist_ok=True)
+    segments = ["A"] if quick else ["A", "B", "C"]
+    models = ["qwen3-14b"] if quick else list(MODELS)
+    duration = 1800.0 if quick else 7200.0
+    systems = ["veRL", "veRL.2x", "Disagg.BAL", "RLBoost"]
+    results = []
+    for model in models:
+        base = None
+        for seg in segments:
+            ev = tr.synthesize_segment(seg, seed=0, duration=duration)
+            for system in systems:
+                if system == "veRL.2x" and model == "qwen3-32b":
+                    continue  # paper: no extra reserved nodes for 32B
+                r = run_system(system, model, ev, duration=duration, seed=1)
+                r.pop("metrics")
+                r["segment"] = seg
+                results.append(r)
+                if system == "veRL":
+                    base = r
+                rel_t = r["throughput"] / base["throughput"]
+                rel_c = r["tokens_per_dollar"] / base["tokens_per_dollar"]
+                emit(f"fig8_10/{model}/{seg}/{system}", r["throughput"],
+                     rel_t, rel_c)
+    (OUT / "trace_throughput.json").write_text(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

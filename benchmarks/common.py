@@ -1,0 +1,96 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import costs as C
+from repro.core import trace as tr
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import model_perf_from_cfg
+
+# the paper's workload: 128 prompts x GRPO group 8, OpenR1-Math (max 14K)
+PAPER_WORKLOAD = dict(n_prompts=128, group_size=8, prompt_len=512,
+                      max_response=14336, mean_response=4000, m_b=32)
+
+MODELS = {"qwen3-8b": 1, "qwen3-14b": 1, "qwen3-32b": 2}  # -> reserved nodes
+
+
+def run_system(system: str, model: str, trace_events, *, duration=None,
+               n_steps=None, seed=0, workload=None, **overrides) -> Dict:
+    """system in {veRL, veRL.2x, Disagg.BAL, RLBoost}; returns summary."""
+    cfg_m = get_config(model)
+    perf = model_perf_from_cfg(cfg_m)
+    wl = dict(workload or PAPER_WORKLOAD)
+    nodes = MODELS.get(model, 1)
+    kw = dict(wl)
+    kw.update(overrides)
+    if system == "veRL":
+        rc = RunnerConfig(mode="colocated", n_reserved_nodes=nodes,
+                          seed=seed, **kw)
+        trace_events = tr.constant_trace(0)
+    elif system == "veRL.2x":
+        rc = RunnerConfig(mode="colocated", n_reserved_nodes=2 * nodes,
+                          seed=seed, **kw)
+        trace_events = tr.constant_trace(0)
+    elif system == "Disagg.BAL":
+        n = balanced_instances(model, nodes, wl)
+        rc = RunnerConfig(mode="disagg", n_reserved_nodes=nodes,
+                          disagg_instances=n, seed=seed, **kw)
+        trace_events = tr.constant_trace(n)
+    elif system == "RLBoost":
+        rc = RunnerConfig(mode="rlboost", n_reserved_nodes=nodes,
+                          seed=seed, **kw)
+    else:
+        raise ValueError(system)
+    runner = HybridRunner(rc, perf, model_cfg=cfg_m)
+    runner.load_trace(trace_events)
+    t0 = time.time()
+    metrics = runner.run(n_steps=n_steps, duration=duration)
+    dur = metrics[-1]["t_end"] - metrics[0]["t_start"] if metrics else 1.0
+    tokens = sum(m["tokens"] for m in metrics)
+    # cost: reserved nodes the whole duration; spot instance-seconds held.
+    # Disagg.BAL's fixed pool is RESERVED capacity (paper: it cannot use
+    # preemptible instances) -> bill its instances as on-demand fractions.
+    spot_s = runner.manager.spot_seconds
+    reserved = rc.n_reserved_nodes
+    cost = C.run_cost(reserved, 0.0, dur)
+    if system == "Disagg.BAL":
+        # 2-chip reserved instances at on-demand rates (1/4 of an 8-chip node)
+        cost += (rc.disagg_instances * C.ON_DEMAND_NODE_PER_H / 4.0
+                 * dur / 3600.0)
+    elif system == "RLBoost":
+        cost += C.SPOT_INSTANCE_PER_H * spot_s / 3600.0
+    return dict(system=system, model=model, steps=len(metrics),
+                duration=dur, tokens=tokens,
+                throughput=tokens / max(dur, 1e-9),
+                cost=cost, tokens_per_dollar=tokens / max(cost, 1e-9),
+                wall_s=time.time() - t0, metrics=metrics)
+
+
+def balanced_instances(model: str, nodes: int, wl) -> int:
+    """StreamRL-style resource optimizer: #instances balancing rollout and
+    training rates."""
+    cfg_m = get_config(model)
+    perf = model_perf_from_cfg(cfg_m)
+    from repro.core.perfmodel import RESERVED_NODE, SPOT_INSTANCE
+    tokens = wl["n_prompts"] * wl["group_size"] * (
+        wl["prompt_len"] + wl["mean_response"])
+    t_train = perf.train_time(RESERVED_NODE, tokens, n_nodes=nodes)
+    gen_tokens = wl["n_prompts"] * wl["group_size"] * wl["mean_response"]
+    for n in range(1, 64):
+        rate = n * 48 / perf.decode_step_time(SPOT_INSTANCE, 48,
+                                              wl["mean_response"] / 2, cfg_m)
+        if gen_tokens / rate <= t_train:
+            return n
+    return 64
+
+
+def emit(name: str, value, *derived):
+    parts = [name, f"{value:.6g}"] + [f"{d:.6g}" if isinstance(d, float)
+                                      else str(d) for d in derived]
+    print(",".join(parts), flush=True)

@@ -1,0 +1,78 @@
+"""End-to-end driver: REAL GRPO training of a small model for a few hundred
+steps under the RLBoost hybrid architecture, with preemptions, token-level
+migration and pull-based weight transfer — everything real except the clock
+(virtual, deterministic).
+
+  PYTHONPATH=src python examples/hybrid_rl_training.py [--steps 200]
+
+Expect the shaped math reward to climb as the model learns the 1-digit
+arithmetic task.  Checkpoints land in /tmp/rlboost_ckpt; kill and re-run to
+watch checkpoint-restart resume from the last step (fault tolerance).
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import trace as tr
+from repro.core.hybrid_runtime import RunnerConfig
+from repro.rl.harness import RealRLHarness, tiny_math_config
+
+CKPT_DIR = "/tmp/rlboost_ckpt"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = tiny_math_config()
+    rc = RunnerConfig(mode="rlboost", n_prompts=8, group_size=4, m_b=8,
+                      t_seed_init=4.0, seed=7)
+    h = RealRLHarness(cfg, rc, max_new=10, lr=1e-3)
+
+    start = ckpt.latest_step(CKPT_DIR)
+    if start is not None:
+        state, side = ckpt.restore(ckpt.step_path(CKPT_DIR, start),
+                                   {"params": h.params, "opt": h.opt})
+        h.params, h.opt = state["params"], state["opt"]
+        h.runner.scheduler.t_seed = side["meta"].get("t_seed", 4.0)
+        print(f"[restart] resumed from checkpoint step {start}")
+    else:
+        start = 0
+
+    # churn-y availability: preemptions + re-allocations throughout
+    ev = [(0.0, 4)]
+    rng = np.random.RandomState(0)
+    t = 60.0
+    while t < 1e6:
+        ev.append((t, -1))
+        ev.append((t + rng.uniform(10, 30), +1))
+        t += rng.uniform(60, 180)
+        if len(ev) > 400:
+            break
+    h.runner.load_trace(tr.step_trace(ev))
+
+    saver = ckpt.AsyncCheckpointer(CKPT_DIR, keep=2)
+    done = start
+    remaining = args.steps - start
+    while remaining > 0:
+        chunk = min(args.ckpt_every, remaining)
+        metrics, rewards = h.run(n_steps=h.runner.step_idx + chunk)
+        done += chunk
+        remaining -= chunk
+        saver.save({"params": h.params, "opt": h.opt}, step=done,
+                   meta={"t_seed": h.runner.scheduler.t_seed}, block=True)
+        r = rewards[-1] if rewards else 0.0
+        m = metrics[-1]
+        print(f"step {done:4d}  reward={r:.3f}  thpt={m['throughput']:.0f}"
+              f"  T_seed={m['t_seed']:.1f}s  inst={m['n_remote']}"
+              f"  preemptions={m['preemptions']} migrations={m['migrations']}",
+              flush=True)
+    print("reward curve:", [round(r, 3) for r in h.step_rewards])
+
+
+if __name__ == "__main__":
+    main()

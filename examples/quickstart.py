@@ -1,0 +1,69 @@
+"""Quickstart: the RLBoost public API in one file.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Pick an assigned architecture, build its reduced config.
+2. Generate with the serving engine (continuous batching).
+3. Run one GRPO train step.
+4. Simulate one RLBoost hybrid step with preemptible instances.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.core import trace as tr
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import model_perf_from_cfg
+from repro.data import tokenizer as tok
+from repro.models import CPU_RT, init_params
+from repro.rl import grpo
+from repro.rl.sampler import request_key
+from repro.serving.engine import InferenceEngine
+
+print("assigned architectures:", ", ".join(list_archs()))
+
+# --- 1. model ---------------------------------------------------------------
+cfg = get_config("qwen2-7b").reduced(vocab_size=tok.VOCAB_SIZE)
+params = init_params(cfg, jax.random.PRNGKey(0))
+print(f"model: {cfg.name} ({sum(x.size for x in jax.tree.leaves(params)):,} params)")
+
+# --- 2. serve ---------------------------------------------------------------
+engine = InferenceEngine(cfg, params, max_batch=4, slab_len=64,
+                         temperature=0.0)
+slot, ev = engine.add_request(0, tok.encode("12+34="), request_key(0, 0),
+                              max_total=20, n_prompt=7)
+toks = [ev.token]
+while not ev.finished and len(toks) < 10:
+    evs = engine.step()
+    if not evs:
+        break
+    ev = evs[0]
+    toks.append(ev.token)
+print("generated:", tok.decode(tok.strip_special(toks)) or "<raw>", toks)
+
+# --- 3. one GRPO train step --------------------------------------------------
+state = grpo.init_train_state(params)
+step = grpo.make_train_step(cfg, CPU_RT, lr=1e-4)
+B, S = 4, 24
+key = jax.random.PRNGKey(1)
+batch = {
+    "tokens": jax.random.randint(key, (B, S), 3, cfg.vocab_size),
+    "response_mask": jnp.ones((B, S)).at[:, :6].set(0.0),
+    "advantages": grpo.group_advantages(jnp.array([1.0, 0.0, 1.0, 0.0]), 2),
+    "behavior_logprobs": jnp.zeros((B, S)) - 2.0,
+}
+state, metrics = step(state, batch)
+print("train step:", {k: round(float(v), 4) for k, v in metrics.items()})
+
+# --- 4. RLBoost hybrid step on preemptible instances -------------------------
+big = get_config("qwen3-14b")
+runner = HybridRunner(RunnerConfig(mode="rlboost", n_prompts=32,
+                                   group_size=4, m_b=16, seed=0),
+                      model_perf_from_cfg(big), model_cfg=big)
+runner.load_trace(tr.step_trace([(0.0, 6), (120.0, -1), (150.0, +1)]))
+m = runner.run(n_steps=2)
+for x in m:
+    print(f"hybrid step {x['step']}: {x['throughput']:.0f} tok/s, "
+          f"T_seed={x['t_seed']:.1f}s, instances={x['n_remote']}, "
+          f"migrations={x['migrations']}")

@@ -1,0 +1,37 @@
+"""Replay the paper's trace segments (A/B/C synthesized to Table 5 stats)
+through all four systems and print the Fig 8/10 comparison.
+
+  PYTHONPATH=src python examples/spot_trace_replay.py [--segment A] [--model qwen3-14b]
+"""
+
+import argparse
+
+from repro.core import trace as tr
+from benchmarks.common import run_system
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--segment", default="A", choices=["A", "B", "C"])
+    ap.add_argument("--model", default="qwen3-14b")
+    ap.add_argument("--duration", type=float, default=3600.0)
+    args = ap.parse_args()
+
+    ev = tr.synthesize_segment(args.segment, seed=0, duration=args.duration)
+    print(f"segment {args.segment}: avg capacity "
+          f"{tr.average_capacity(ev, args.duration):.2f}, "
+          f"{sum(1 for e in ev if e.delta < 0)} preemptions")
+    base = None
+    for system in ["veRL", "veRL.2x", "Disagg.BAL", "RLBoost"]:
+        r = run_system(system, args.model, ev, duration=args.duration, seed=1)
+        if base is None:
+            base = r
+        print(f"{system:11s} thpt={r['throughput']:8.0f} tok/s "
+              f"({r['throughput']/base['throughput']:.2f}x) "
+              f"cost-eff={r['tokens_per_dollar']:8.0f} tok/$ "
+              f"({r['tokens_per_dollar']/base['tokens_per_dollar']:.2f}x) "
+              f"steps={r['steps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Atomic, mesh-independent checkpoints.
+
+Checkpoints are host numpy archives (npz) + a JSON metadata sidecar, so a
+restart may resume onto a *different* mesh/topology (elastic re-sharding is
+just device_put with the new shardings).  Writes are atomic (tmp + rename)
+and can run on a background thread (async_save) so training overlaps I/O.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, state, *, step: int, meta: Optional[Dict] = None):
+    """Atomic checkpoint write."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp.npz")
+    flat = _flatten(state)
+    np.savez(tmp, **flat)
+    os.replace(tmp, path.with_suffix(".npz"))
+    sidecar = {"step": step, "time": time.time(), "meta": meta or {},
+               "n_arrays": len(flat)}
+    tmp_json = path.with_suffix(".tmp.json")
+    tmp_json.write_text(json.dumps(sidecar, indent=2))
+    os.replace(tmp_json, path.with_suffix(".json"))
+
+
+def restore(path: str, like_state, shardings=None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like_state`` (shapes must match).
+
+    ``shardings``: optional pytree of NamedSharding to place leaves onto a
+    (possibly different) mesh — elastic restart support.
+    """
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    sidecar = json.loads(path.with_suffix(".json").read_text())
+
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like_state)
+    treedef = jax.tree.structure(like_state)
+    out = []
+    for p, leaf in leaves_with_path[0]:
+        key = jax.tree_util.keystr(p)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out.append(arr)
+    state = jax.tree.unflatten(treedef, out)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, sidecar
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = []
+    for f in d.glob("step_*.json"):
+        try:
+            steps.append(int(f.stem.split("_")[1]))
+        except (IndexError, ValueError):
+            continue
+    return max(steps) if steps else None
+
+
+def step_path(ckpt_dir: str, step: int) -> str:
+    return str(Path(ckpt_dir) / f"step_{step:08d}")
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (training never blocks on I/O)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, state, *, step: int, meta=None, block: bool = False):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # snapshot before async
+
+        def work():
+            save(step_path(self.ckpt_dir, step), host_state, step=step,
+                 meta=meta)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        d = Path(self.ckpt_dir)
+        steps = sorted(
+            int(f.stem.split("_")[1]) for f in d.glob("step_*.json"))
+        for s in steps[:-self.keep]:
+            for suffix in (".npz", ".json"):
+                try:
+                    os.remove(step_path(self.ckpt_dir, s) + suffix)
+                except OSError:
+                    pass

@@ -1,0 +1,36 @@
+"""Architecture configs.  Importing this package populates the registry."""
+
+from repro.configs.base import ModelConfig, get_config, list_archs, register  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_status, valid_cells  # noqa: F401
+
+# arch modules register themselves on import
+from repro.configs import (  # noqa: F401
+    deepseek_moe_16b,
+    gemma2_27b,
+    gemma3_4b,
+    gemma3_12b,
+    hubert_xlarge,
+    hymba_1_5b,
+    llava_next_34b,
+    mamba2_130m,
+    qwen2_7b,
+    qwen2_moe_a2_7b,
+    qwen3_rl,
+)
+
+ALL_ARCHS = True  # sentinel for base.get_config late import
+
+ASSIGNED_ARCHS = (
+    "mamba2-130m",
+    "qwen2-7b",
+    "gemma3-12b",
+    "gemma2-27b",
+    "gemma3-4b",
+    "hubert-xlarge",
+    "hymba-1.5b",
+    "llava-next-34b",
+    "qwen2-moe-a2.7b",
+    "deepseek-moe-16b",
+)
+
+PAPER_ARCHS = ("qwen3-8b", "qwen3-14b", "qwen3-32b")

@@ -1,0 +1,24 @@
+"""qwen2-7b — dense GQA transformer with QKV bias.
+
+[dense] 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064  [arXiv:2407.10671]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen2-7b")
+def qwen2_7b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-7b",
+        family="dense",
+        n_layers=28,
+        d_model=3584,
+        n_heads=28,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=18944,
+        vocab_size=152064,
+        pattern=("global",),
+        qkv_bias=True,
+        rope_theta=1.0e6,
+        tie_embeddings=False,
+    )

@@ -1,0 +1,364 @@
+"""The RLBoost hybrid step executor (paper §3/§4.1) + baseline modes.
+
+One runtime, three architectures (paper Fig 1):
+  * "rlboost"   — reserved cluster seeds rollout for T_seed, then trains with
+                  dynamic micro-batch pipelining while preemptible instances
+                  finish rollout (adaptive offload, Algorithm 1);
+  * "colocated" — veRL-style: the cluster does all rollout, then trains
+                  (time-sharing; no preemptible resources);
+  * "disagg"    — Disagg.BAL: a *fixed* reserved remote pool sized by a
+                  resource optimizer, micro-batch pipelining, but no
+                  elasticity / seeding / migration.
+
+Works with the sim backend (analytic perf model; paper-figure benchmarks)
+and the real backend (tiny models, true tokens/GRPO training; integrity
+benchmark + integration tests).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.events import EventLoop
+from repro.core.load_balancer import LoadBalancer
+from repro.core.microbatch import MicrobatchCollector
+from repro.core.perfmodel import (RESERVED_NODE, SPOT_INSTANCE, InstanceKind,
+                                  ModelPerf)
+from repro.core.requests import Request
+from repro.core.rollout_manager import RolloutManager
+from repro.core.seeding import SeedingScheduler, StepStats
+from repro.core.trace import TraceEvent
+from repro.core.weight_transfer import TransferAgent, WeightStore
+
+
+@dataclass
+class RunnerConfig:
+    mode: str = "rlboost"                  # rlboost | colocated | disagg
+    n_prompts: int = 128
+    group_size: int = 8
+    prompt_len: int = 512
+    max_response: int = 14336
+    mean_response: float = 3000.0
+    length_sigma: float = 0.8          # lognormal sigma of response lengths
+    n_reserved_nodes: int = 1
+    n_local_engines: int = 4               # N_resv seeding engines per setup
+    local_max_exec: int = 128
+    remote_max_exec: int = 64
+    m_b: int = 32                          # min microbatch (samples)
+    theta: int = 8
+    eta: float = 4.0
+    t_seed_init: float = 20.0
+    fault_mode: str = "migrate"
+    transfer_mode: str = "pull"
+    compression: str = "none"
+    disagg_instances: int = 0              # fixed pool for disagg mode
+    seed: int = 0
+    snapshot_d2h_bw: float = 5.0e10        # weight snapshot to host, B/s
+    transfer_gbps_scale: float = 1.0       # scales DCN bw (real-harness pacing)
+
+
+class HybridRunner:
+    def __init__(self, cfg: RunnerConfig, perf: ModelPerf, *, model_cfg=None,
+                 engine_factory: Optional[Callable] = None,
+                 train_fn: Optional[Callable[[List[Request]], None]] = None,
+                 publish_fn: Optional[Callable[[], object]] = None,
+                 request_factory: Optional[Callable[[int, int], Request]] = None):
+        self.cfg = cfg
+        self.perf = perf
+        self.model_cfg = model_cfg
+        self.train_fn = train_fn
+        self.publish_fn = publish_fn
+        self.request_factory = request_factory
+        self.loop = EventLoop()
+        agents = [TransferAgent(i, RESERVED_NODE.dcn_gbps
+                                * cfg.transfer_gbps_scale)
+                  for i in range(cfg.n_reserved_nodes)]
+        self.store = WeightStore(agents)
+        spot = InstanceKind(SPOT_INSTANCE.name, SPOT_INSTANCE.chips,
+                            SPOT_INSTANCE.dcn_gbps * cfg.transfer_gbps_scale)
+        self.manager = RolloutManager(
+            self.loop, perf, self.store,
+            lb=LoadBalancer(theta=cfg.theta),
+            spot_kind=spot,
+            fault_mode=cfg.fault_mode, transfer_mode=cfg.transfer_mode,
+            compression=cfg.compression, cfg=model_cfg,
+            engine_factory=engine_factory,
+            max_exec_per_instance=cfg.remote_max_exec, seed=cfg.seed)
+        self.scheduler = SeedingScheduler(
+            n_resv=cfg.n_local_engines * cfg.n_reserved_nodes,
+            eta=cfg.eta, t_init=cfg.t_seed_init,
+            enabled=(cfg.mode == "rlboost"))
+        self.collector = MicrobatchCollector(
+            group_size=cfg.group_size, min_microbatch=cfg.m_b)
+        self.manager.on_complete_cb = self._on_complete
+        self.collector.on_ready = self._try_train
+
+        self.capacity = 0                   # trace-provided availability
+        self.rng = np.random.RandomState(cfg.seed + 17)
+        self._next_req_id = 0
+        self._next_group = 0
+
+        # per-step trainer state
+        self._step_active = False
+        self._rollout_done = False
+        self._trainer_busy = False
+        self._trainer_available_at = 0.0
+        self._idle_since = 0.0
+        self._t_train = 0.0
+        self._t_train_wait = 0.0
+        self._trained = 0
+        self._total = 0
+        self._step_requests: List[Request] = []
+        self._n_series: List = []           # (t, n_remote) for n_prem_avg
+        self.metrics: List[Dict] = []
+        self.step_idx = 0
+
+    # ------------------------------------------------------------------ #
+    # trace / capacity handling
+    # ------------------------------------------------------------------ #
+    def load_trace(self, events: List[TraceEvent]):
+        for e in events:
+            self.loop.at(e.t, lambda d=e.delta: self._capacity_change(d))
+
+    def _capacity_change(self, delta: int):
+        self.capacity = max(self.capacity + delta, 0)
+        if delta < 0:
+            remotes = [i for i in self.manager.instances.values()
+                       if i.alive and not i.local]
+            if remotes and self.manager.n_remote() > self.capacity:
+                victim = min(remotes, key=lambda i: i.created_t)
+                self.manager.preempt(victim)
+        self._reconcile()
+        self._record_n()
+
+    def _reconcile(self):
+        if self.cfg.mode == "colocated":
+            return
+        limit = (self.cfg.disagg_instances if self.cfg.mode == "disagg"
+                 else self.scheduler.max_instances())
+        while self.manager.n_remote() < min(self.capacity, limit):
+            self.manager.allocate()
+            self._record_n()
+
+    def _record_n(self):
+        self._n_series.append((self.loop.now, self.manager.n_remote()))
+
+    # ------------------------------------------------------------------ #
+    # step construction
+    # ------------------------------------------------------------------ #
+    def _make_requests(self) -> List[Request]:
+        reqs = []
+        for p in range(self.cfg.n_prompts):
+            group = self._next_group
+            self._next_group += 1
+            for g in range(self.cfg.group_size):
+                rid = self._next_req_id
+                self._next_req_id += 1
+                if self.request_factory is not None:
+                    r = self.request_factory(rid, group)
+                else:
+                    ln = self.rng.lognormal(
+                        math.log(self.cfg.mean_response),
+                        self.cfg.length_sigma)
+                    tgt = int(np.clip(ln, 32, self.cfg.max_response))
+                    r = Request(id=rid, group=group,
+                                prompt_len=self.cfg.prompt_len,
+                                max_total=(self.cfg.prompt_len
+                                           + self.cfg.max_response),
+                                target_total=self.cfg.prompt_len + tgt,
+                                seed=self.cfg.seed)
+                reqs.append(r)
+        return reqs
+
+    # ------------------------------------------------------------------ #
+    # the RL step
+    # ------------------------------------------------------------------ #
+    def start_step(self):
+        cfg = self.cfg
+        self._step_active = True
+        self._rollout_done = False
+        self._t_train = 0.0
+        self._t_train_wait = 0.0
+        self._trained = 0
+        self._step_started = self.loop.now
+        self._n_series = [(self.loop.now, self.manager.n_remote())]
+        self.collector.reset()
+
+        # 1. publish new weights (all-gather + D2H snapshot)
+        snapshot = self.publish_fn() if self.publish_fn else None
+        self.store.publish(self.store.version + 1, snapshot)
+        self.manager.required_version = self.store.version
+        snap_t = self.perf.weight_bytes / cfg.snapshot_d2h_bw
+
+        # 2. weight delivery to existing remotes
+        if cfg.transfer_mode == "sync":
+            self.manager.broadcast_sync()
+        else:
+            for inst in list(self.manager.instances.values()):
+                if inst.alive and not inst.local:
+                    self.manager._start_pull(inst)
+
+        # 3. requests
+        reqs = self._make_requests()
+        self._step_requests = reqs
+        self._total = len(reqs)
+        self.manager.submit(reqs)
+
+        # 4. local seeding engines (rlboost / colocated): the reserved nodes
+        # re-purposed as N_resv TP-sharded rollout engines (paper: same TP
+        # size as one remote instance — 8 chips / 4 engines = 2 chips each)
+        self._locals = []
+        if cfg.mode in ("rlboost", "colocated"):
+            chips_per_engine = max(
+                cfg.n_reserved_nodes * RESERVED_NODE.chips
+                // max(self.scheduler.n_resv, 1), 1)
+            local_kind = InstanceKind("local-engine", chips_per_engine,
+                                      RESERVED_NODE.dcn_gbps)
+            for _ in range(self.scheduler.n_resv):
+                inst = self.manager.allocate(
+                    local=True, kind=local_kind,
+                    max_exec=cfg.local_max_exec // max(self.scheduler.n_resv, 1))
+                self._locals.append(inst)
+            if cfg.mode == "rlboost":
+                self.loop.schedule(max(self.scheduler.t_seed, snap_t),
+                                   self._end_seeding)
+        self._reconcile()
+
+        # trainer availability
+        if cfg.mode == "rlboost":
+            self._trainer_available_at = (self.loop.now
+                                          + max(self.scheduler.t_seed, snap_t))
+        elif cfg.mode == "disagg":
+            self._trainer_available_at = self.loop.now + snap_t
+        else:
+            self._trainer_available_at = float("inf")  # set at rollout end
+        self._idle_since = self._trainer_available_at
+
+    def _end_seeding(self):
+        if not self._step_active:
+            return
+        if self.manager.n_remote() == 0 and not self._rollout_done:
+            # no remotes to hand off to: keep seeding (fallback, re-check)
+            self.loop.schedule(5.0, self._end_seeding)
+            self._trainer_available_at = self.loop.now + 5.0
+            return
+        for inst in self._locals:
+            self.manager.release(inst)       # partial responses migrate out
+        self._locals = []
+        self._trainer_available_at = self.loop.now
+        self._idle_since = self.loop.now
+        self._try_train()
+
+    # ------------------------------------------------------------------ #
+    # training consumption
+    # ------------------------------------------------------------------ #
+    def _on_complete(self, r: Request):
+        self.collector.add(r)
+        if all(x.done for x in self._step_requests):
+            self._rollout_done = True
+            if self.cfg.mode == "colocated":
+                for inst in self._locals:
+                    self.manager.release(inst)
+                self._locals = []
+                self._trainer_available_at = self.loop.now
+                self._idle_since = self.loop.now
+            self._try_train()
+
+    def _try_train(self):
+        if (not self._step_active or self._trainer_busy
+                or self.loop.now < self._trainer_available_at):
+            return
+        mb = self.collector.pop_microbatch()
+        if mb is None and self._rollout_done and self.collector.available():
+            mb = self.collector.flush()
+        if mb is None:
+            if self._trained >= self._total:
+                self._finish_step()
+            return
+        self._t_train_wait += max(self.loop.now - self._idle_since, 0.0)
+        tokens = sum(r.total_len for r in mb)
+        dt = self.perf.train_time(RESERVED_NODE, tokens,
+                                  n_nodes=self.cfg.n_reserved_nodes,
+                                  internode_penalty=(
+                                      1.15 if self.cfg.n_reserved_nodes > 1
+                                      else 1.0))
+        self._trainer_busy = True
+
+        def done(mb=mb, dt=dt):
+            self._trainer_busy = False
+            self._t_train += dt
+            self._trained += len(mb)
+            self._idle_since = self.loop.now
+            if self.train_fn is not None:
+                self.train_fn(mb)
+            self._try_train()
+        self.loop.schedule(dt, done)
+
+    # ------------------------------------------------------------------ #
+    def _finish_step(self):
+        self._step_active = False
+        now = self.loop.now
+        step_time = now - self._step_started
+        remotes = [i for i in self.manager.instances.values()
+                   if i.alive and not i.local]
+        waits = [max(now - i.last_active_t, 0.0) for i in remotes
+                 if not i.executing]
+        t_remote_wait = float(np.mean(waits)) if waits else 0.0
+        t_remote = (float(np.mean([i.busy_time for i in remotes]))
+                    if remotes else 0.0)
+        for i in remotes:
+            i.busy_time = 0.0
+        # time-weighted average instance count
+        xs = self._n_series + [(now, self.manager.n_remote())]
+        area = sum((t2 - t1) * n1 for (t1, n1), (t2, _)
+                   in zip(xs, xs[1:]))
+        n_avg = area / max(now - self._step_started, 1e-9)
+
+        tokens = sum(r.total_len for r in self._step_requests)
+        self.metrics.append(dict(
+            step=self.step_idx, t_start=self._step_started, t_end=now,
+            step_time=step_time, tokens=tokens,
+            throughput=tokens / max(step_time, 1e-9),
+            t_seed=self.scheduler.t_seed, n_prem=self.scheduler.n_prem,
+            n_remote=self.manager.n_remote(), n_avg=n_avg,
+            t_train=self._t_train, t_train_wait=self._t_train_wait,
+            t_remote_wait=t_remote_wait,
+            migrations=self.manager.n_migrations,
+            preemptions=self.manager.n_preemptions))
+        self.scheduler.update(StepStats(
+            t_train_wait=self._t_train_wait, t_remote_wait=t_remote_wait,
+            t_train=max(self._t_train, 1e-9), t_remote=t_remote,
+            n_prem_avg=n_avg, n_prem_end=self.manager.n_remote()))
+        self.step_idx += 1
+        self._reconcile()                    # N_prem may have changed
+
+    # ------------------------------------------------------------------ #
+    def run(self, *, n_steps: Optional[int] = None,
+            duration: Optional[float] = None) -> List[Dict]:
+        """Run steps back-to-back until n_steps or virtual duration.
+        A step in flight when the duration elapses is run to completion
+        (throughput is per completed step, as in the paper)."""
+        assert n_steps or duration
+
+        def loop_steps():
+            if ((n_steps is not None and self.step_idx >= n_steps)
+                    or (duration is not None and self.loop.now >= duration)):
+                self.loop.stop()
+                return
+            self.start_step()
+            wait_done()
+
+        def wait_done():
+            if self._step_active:
+                self.loop.schedule(1.0, wait_done)
+            else:
+                loop_steps()
+
+        self.loop.schedule(0.0, loop_steps)
+        self.loop.run()
+        self.manager.finalize_costs()
+        return self.metrics

@@ -1,0 +1,172 @@
+"""Rollout instances in the event world.
+
+One class, two backends:
+  * sim  — decode advances one token per executing request per modeled step
+           (roofline step times from core.perfmodel);
+  * real — an InferenceEngine with a tiny model generates actual tokens;
+           time is still modeled (deterministic benchmarks, real outputs).
+
+Instances implement the InstanceView protocol for the load balancer and
+stream token events to the rollout manager (token-level collection).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.events import EventLoop
+from repro.core.perfmodel import InstanceKind, ModelPerf
+from repro.core.requests import Request, Status
+
+
+class RolloutInstance:
+    def __init__(self, id: int, loop: EventLoop, kind: InstanceKind,
+                 perf: ModelPerf, manager, *, max_exec: int = 64,
+                 local: bool = False, cfg=None, engine=None,
+                 rng_seed: int = 0):
+        self.id = id
+        self.loop = loop
+        self.kind = kind
+        self.perf = perf
+        self.manager = manager
+        self.max_exec = (min(max_exec, engine.max_batch)
+                         if engine is not None else max_exec)
+        self.local = local                 # a seeding engine on the cluster
+        self.cfg = cfg
+        self.engine = engine               # real backend (InferenceEngine)
+        self.alive = True
+        self.weight_version = -1
+        self.pending: List[Request] = []
+        self.executing: Dict[int, Request] = {}
+        self._step_scheduled = False
+        self._pending_prefill_tokens = 0
+        self.busy_time = 0.0
+        self.tokens_out = 0
+        self.last_active_t = loop.now
+        self.created_t = loop.now
+        self._gen = np.random.RandomState(rng_seed * 2654435761 % (2**31))
+
+    # ---------------- InstanceView protocol ---------------- #
+    def n_pending(self) -> int:
+        return len(self.pending)
+
+    def n_executing(self) -> int:
+        return len(self.executing)
+
+    def accepts_work(self) -> bool:
+        return (self.alive
+                and self.weight_version >= self.manager.required_version)
+
+    # ---------------- work intake ---------------- #
+    def assign(self, req: Request):
+        req.status = Status.PENDING
+        req.instance_id = self.id
+        self.pending.append(req)
+        self._kick()
+
+    def take_back(self, req_id: int) -> Optional[Request]:
+        """Remove a request (for migration), preserving its tokens."""
+        for i, r in enumerate(self.pending):
+            if r.id == req_id:
+                return self.pending.pop(i)
+        r = self.executing.pop(req_id, None)
+        if r is not None and self.engine is not None:
+            self.engine.drop_request(req_id)
+        return r
+
+    def drain_all(self) -> List[Request]:
+        """Preemption / seeding-end: all requests with partials preserved."""
+        out = list(self.pending)
+        self.pending.clear()
+        for r in list(self.executing.values()):
+            out.append(r)
+        if self.engine is not None:
+            for r in self.executing.values():
+                self.engine.drop_request(r.id)
+        self.executing.clear()
+        return out
+
+    def preempt(self):
+        self.alive = False
+
+    # ---------------- execution loop ---------------- #
+    def _admit(self):
+        while self.pending and len(self.executing) < self.max_exec:
+            if self.engine is not None and self.engine.free_slots() == 0:
+                break
+            r = self.pending.pop(0)
+            r.status = Status.EXECUTING
+            self.executing[r.id] = r
+            # admission costs one prefill over prompt+partial (migration's
+            # "single prefill" — paper Fig 5)
+            self._pending_prefill_tokens += r.total_len
+            if self.engine is not None:
+                import jax
+                from repro.rl.sampler import request_key
+                slot_ev = self.engine.add_request(
+                    r.id, r.context_ids(),
+                    request_key(r.seed, r.id), r.max_total, r.prompt_len)
+                self._emit(r, slot_ev[1])
+
+    def _kick(self):
+        self._admit()
+        if self.executing and not self._step_scheduled and self.alive:
+            dt = self._step_time()
+            self._next_dt = dt
+            self._step_scheduled = True
+            self.loop.schedule(dt, self._on_step)
+
+    def _step_time(self) -> float:
+        n = max(len(self.executing), 1)
+        avg_ctx = (sum(r.total_len for r in self.executing.values()) / n
+                   if self.executing else 0.0)
+        t = self.perf.decode_step_time(self.kind, n, avg_ctx, self.cfg)
+        if self._pending_prefill_tokens:
+            t += self.perf.prefill_time(self.kind, self._pending_prefill_tokens)
+            self._pending_prefill_tokens = 0
+        return t
+
+    def _emit(self, r: Request, ev):
+        """Real-backend event: record token + notify manager."""
+        r.tokens.append(ev.token)
+        r.logprobs.append(ev.logprob)
+        r.n_generated += 1
+        self.tokens_out += 1
+        self.manager.on_token(r, self)
+        if ev.finished:
+            self.executing.pop(r.id, None)
+            self.manager.on_complete(r, self)
+
+    def _on_step(self):
+        self._step_scheduled = False
+        if not self.alive:
+            return
+        n_exec = len(self.executing)
+        if n_exec == 0:
+            return
+        dt = getattr(self, "_next_dt", 1e-3)
+        self.busy_time += dt
+        self.last_active_t = self.loop.now
+
+        if self.engine is not None:
+            events = self.engine.step()
+            by_id = {e.req_id: e for e in events}
+            for r in list(self.executing.values()):
+                e = by_id.get(r.id)
+                if e is not None:
+                    self._emit(r, e)
+        else:
+            for r in list(self.executing.values()):
+                r.n_generated += 1
+                self.tokens_out += 1
+                self.manager.on_token(r, self)
+                if r.total_len >= min(r.target_total or r.max_total,
+                                      r.max_total):
+                    self.executing.pop(r.id, None)
+                    self.manager.on_complete(r, self)
+        # record throughput sample for the profile table
+        self.manager.lb.profile.record(n_exec, n_exec / max(dt, 1e-9))
+        self._kick()

@@ -1,0 +1,57 @@
+"""Dynamic micro-batch assembly (paper §4.1, Fig 4a).
+
+GRPO needs whole *groups* (all G responses of a prompt) before advantages
+exist, so the unit of collection is a completed group.  The trainer pulls a
+microbatch as soon as >= m_b samples from completed groups are available; if
+more have arrived, they are packed into one larger microbatch ("if more than
+m_b responses arrive at once, they are gathered in a single microbatch").
+Order does not matter — gradients are accumulated across the whole batch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.requests import Request
+
+
+@dataclass
+class MicrobatchCollector:
+    group_size: int
+    min_microbatch: int                      # m_b (in samples)
+    max_microbatch: int = 1 << 30
+    on_ready: Optional[Callable[[], None]] = None
+
+    _groups: Dict[int, List[Request]] = field(default_factory=dict)
+    _ready: List[Request] = field(default_factory=list)
+    completed_groups: int = 0
+
+    def add(self, req: Request):
+        g = self._groups.setdefault(req.group, [])
+        g.append(req)
+        if len(g) == self.group_size:
+            self._ready.extend(g)
+            self.completed_groups += 1
+            del self._groups[req.group]
+            if self.on_ready is not None:
+                self.on_ready()
+
+    def available(self) -> int:
+        return len(self._ready)
+
+    def pop_microbatch(self) -> Optional[List[Request]]:
+        if len(self._ready) < self.min_microbatch:
+            return None
+        n = min(len(self._ready), self.max_microbatch)
+        out, self._ready = self._ready[:n], self._ready[n:]
+        return out
+
+    def flush(self) -> List[Request]:
+        out, self._ready = self._ready, []
+        return out
+
+    def reset(self):
+        self._groups.clear()
+        self._ready.clear()
+        self.completed_groups = 0

@@ -1,0 +1,92 @@
+"""Analytic performance model (TPU v5e) for the simulation backend.
+
+Roofline-derived step times:
+  decode:   max(compute, weight+KV HBM traffic) per token batch
+  prefill:  compute-bound at prefill MFU
+  training: compute-bound at train MFU (fwd+bwd = 3x fwd)
+
+Numbers: 197 bf16 TFLOP/s, 819 GB/s HBM per chip (the same constants as the
+roofline analysis).  The hardware-adaptation note in DESIGN.md explains the
+mapping from the paper's H100 instances to v5e slices.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+DECODE_MFU = 0.6          # achievable fraction in the memory-bound regime
+PREFILL_MFU = 0.55
+TRAIN_MFU = 0.45
+
+
+@dataclass(frozen=True)
+class InstanceKind:
+    name: str
+    chips: int
+    dcn_gbps: float          # front-end network for weight pulls (Gbit/s)
+
+    @property
+    def flops(self) -> float:
+        return self.chips * PEAK_FLOPS
+
+    @property
+    def hbm(self) -> float:
+        return self.chips * HBM_BW
+
+
+# the paper's 8xH100 reserved node / 2xH100 spot fragment, mapped to v5e
+RESERVED_NODE = InstanceKind("v5e-8-reserved", 8, 400.0)
+SPOT_INSTANCE = InstanceKind("v5e-2-spot", 2, 50.0)
+
+
+@dataclass(frozen=True)
+class ModelPerf:
+    """Analytic per-model quantities (bf16)."""
+    n_params: float           # total (weights moved / trained)
+    n_active: float           # active per token (MoE)
+
+    @property
+    def weight_bytes(self) -> float:
+        return 2.0 * self.n_params
+
+    def kv_bytes_per_token(self, cfg=None) -> float:
+        # coarse: 2 (K+V) * layers * kv_heads * head_dim * 2B; fall back to
+        # a fraction of model dim when cfg is unavailable
+        if cfg is None or not cfg.has_attention:
+            return 0.0
+        mixers = cfg.layer_mixers()
+        n_attn = sum(m in ("global", "local", "hybrid") for m in mixers)
+        return 2.0 * n_attn * cfg.n_kv_heads * cfg.head_dim * 2.0
+
+    # ------------------------------------------------------------------ #
+    def decode_step_time(self, kind: InstanceKind, batch: int,
+                         avg_ctx: float, cfg=None) -> float:
+        """One decode iteration for `batch` in-flight requests."""
+        flops = 2.0 * self.n_active * batch
+        compute = flops / (kind.flops * DECODE_MFU)
+        kv = self.kv_bytes_per_token(cfg) * avg_ctx * batch
+        mem = (self.weight_bytes + kv) / kind.hbm
+        return max(compute, mem)
+
+    def prefill_time(self, kind: InstanceKind, n_tokens: int) -> float:
+        return 2.0 * self.n_active * n_tokens / (kind.flops * PREFILL_MFU)
+
+    def train_time(self, kind: InstanceKind, n_tokens: int,
+                   n_nodes: int = 1, internode_penalty: float = 1.0) -> float:
+        """Training time for n_tokens on n_nodes reserved nodes.
+        internode_penalty models the FSDP cross-node overhead (veRL.2x)."""
+        t = 6.0 * self.n_params * n_tokens / (
+            n_nodes * kind.flops * TRAIN_MFU)
+        return t * internode_penalty
+
+    def weight_transfer_time(self, sender_gbps: float, receiver_gbps: float,
+                             concurrency: int = 1) -> float:
+        bw = min(sender_gbps / max(concurrency, 1), receiver_gbps) * 1e9 / 8
+        return self.weight_bytes / bw
+
+
+def model_perf_from_cfg(cfg) -> ModelPerf:
+    return ModelPerf(n_params=float(cfg.param_count()),
+                     n_active=float(cfg.active_param_count()))

@@ -1,0 +1,46 @@
+"""Rollout request state shared by the sim and real backends."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import List, Optional
+
+
+class Status(Enum):
+    QUEUED = "queued"          # held centrally (delayed dispatch)
+    PENDING = "pending"        # assigned to an instance, not yet executing
+    EXECUTING = "executing"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    id: int
+    group: int                        # GRPO group id
+    prompt_len: int
+    max_total: int                    # prompt + response cap
+    prompt_ids: Optional[List[int]] = None     # real backend
+    target_total: Optional[int] = None         # sim backend: true final len
+    seed: int = 0
+
+    status: Status = Status.QUEUED
+    instance_id: Optional[int] = None
+    tokens: List[int] = field(default_factory=list)      # generated tokens
+    logprobs: List[float] = field(default_factory=list)
+    n_generated: int = 0
+    n_migrations: int = 0
+    created_at: float = 0.0
+    completed_at: Optional[float] = None
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.n_generated
+
+    @property
+    def done(self) -> bool:
+        return self.status == Status.DONE
+
+    def context_ids(self) -> List[int]:
+        """prompt + already-generated tokens (migration continuation)."""
+        return list(self.prompt_ids or []) + self.tokens

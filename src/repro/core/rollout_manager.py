@@ -1,0 +1,239 @@
+"""The rollout manager (paper §3, §5 "Rollout manager").
+
+Responsibilities:
+  * instance lifecycle — allocate on availability (bounded by N_prem),
+    detect preemptions, launch workers when instances appear;
+  * request lifecycle — delayed-dispatch JSQ submission, token-level
+    collection, completion notification to the microbatch collector;
+  * preemption handling — migrate every affected request with its partial
+    tokens ("migrate") or restart from the prompt ("recompute" ablation);
+  * continuous load balancing — periodic ContinuousLB migrations;
+  * weight-transfer coordination — pairs new instances with transfer
+    agents; only routes to instances holding the required version.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.events import EventLoop
+from repro.core.instance import RolloutInstance
+from repro.core.load_balancer import LoadBalancer
+from repro.core.perfmodel import InstanceKind, ModelPerf, SPOT_INSTANCE
+from repro.core.requests import Request, Status
+from repro.core.weight_transfer import TransferPlan, WeightStore
+
+
+class RolloutManager:
+    def __init__(self, loop: EventLoop, perf: ModelPerf, store: WeightStore,
+                 *, lb: Optional[LoadBalancer] = None,
+                 spot_kind: InstanceKind = SPOT_INSTANCE,
+                 fault_mode: str = "migrate",          # | "recompute"
+                 transfer_mode: str = "pull",          # | "sync"
+                 compression: str = "none",
+                 lb_period: float = 2.0,
+                 max_exec_per_instance: int = 64,
+                 cfg=None,
+                 engine_factory: Optional[Callable] = None,
+                 seed: int = 0):
+        self.loop = loop
+        self.perf = perf
+        self.store = store
+        self.lb = lb or LoadBalancer()
+        self.spot_kind = spot_kind
+        self.fault_mode = fault_mode
+        self.transfer_mode = transfer_mode
+        self.compression = compression
+        self.lb_period = lb_period
+        self.max_exec = max_exec_per_instance
+        self.cfg = cfg
+        self.engine_factory = engine_factory
+        self.seed = seed
+
+        self.instances: Dict[int, RolloutInstance] = {}
+        self.queued: List[Request] = []         # held centrally (Theta cap)
+        self.required_version = 0
+        self._next_instance_id = 0
+        self.on_token_cb: Optional[Callable[[Request], None]] = None
+        self.on_complete_cb: Optional[Callable[[Request], None]] = None
+        self.spot_seconds = 0.0                  # cost accounting
+        self.n_preemptions = 0
+        self.n_migrations = 0
+        self._lb_running = False
+
+    # ------------------------------------------------------------------ #
+    # instance lifecycle
+    # ------------------------------------------------------------------ #
+    def live_instances(self, include_local=True) -> List[RolloutInstance]:
+        return [i for i in self.instances.values()
+                if i.alive and (include_local or not i.local)]
+
+    def n_remote(self) -> int:
+        return sum(1 for i in self.instances.values()
+                   if i.alive and not i.local)
+
+    def allocate(self, *, local: bool = False,
+                 kind: Optional[InstanceKind] = None,
+                 max_exec: Optional[int] = None) -> RolloutInstance:
+        iid = self._next_instance_id
+        self._next_instance_id += 1
+        engine = None
+        if self.engine_factory is not None:
+            engine = self.engine_factory()
+        inst = RolloutInstance(
+            iid, self.loop, kind or self.spot_kind, self.perf, self,
+            max_exec=max_exec or self.max_exec, local=local, cfg=self.cfg,
+            engine=engine, rng_seed=self.seed * 1000 + iid)
+        self.instances[iid] = inst
+        if local:
+            # seeding engines already hold the latest weights (same HBM)
+            inst.weight_version = self.store.version
+            if engine is not None:
+                engine.load_weights(self.store.snapshot, self.store.version)
+            self._dispatch()
+        else:
+            self._provision(inst)
+        self._ensure_lb()
+        return inst
+
+    def _provision(self, inst: RolloutInstance):
+        """Pull-based weight transfer; 'sync' mode waits for the boundary."""
+        if self.transfer_mode == "sync" and self.required_version > 0:
+            # synchronized push only happens at the next step boundary
+            inst.weight_version = -1
+            return
+        self._start_pull(inst)
+
+    def _start_pull(self, inst: RolloutInstance):
+        agent = self.store.pair()
+        agent.active_pulls += 1
+        plan = TransferPlan(self.perf.weight_bytes, self.compression)
+        dt = plan.duration(agent, inst.kind.dcn_gbps)
+        version = self.store.version
+
+        def done():
+            agent.active_pulls -= 1
+            if not inst.alive:
+                return
+            inst.weight_version = version
+            if inst.engine is not None and self.store.snapshot is not None:
+                inst.engine.load_weights(self.store.snapshot, version)
+            if version < self.store.version:       # stale — pull again
+                self._start_pull(inst)
+            else:
+                self._dispatch()
+        self.loop.schedule(dt, done)
+
+    def broadcast_sync(self):
+        """Synchronized weight push at the step boundary (baseline mode)."""
+        waiting = [i for i in self.instances.values()
+                   if i.alive and not i.local
+                   and i.weight_version < self.store.version]
+        for inst in waiting:
+            self._start_pull(inst)
+
+    def preempt(self, inst: RolloutInstance):
+        if not inst.alive:
+            return
+        inst.preempt()
+        self.spot_seconds += self.loop.now - inst.created_t
+        self.n_preemptions += 1
+        victims = inst.drain_all()
+        for r in victims:
+            if self.fault_mode == "recompute":
+                # token-level collection disabled: lose generated tokens
+                r.tokens.clear()
+                r.logprobs.clear()
+                r.n_generated = 0
+            r.status = Status.QUEUED
+            r.instance_id = None
+            r.n_migrations += 1
+            self.n_migrations += 1
+            self.queued.append(r)
+        del self.instances[inst.id]
+        self._dispatch()
+
+    def release(self, inst: RolloutInstance):
+        """Voluntary shutdown (seeding end / over-provisioning)."""
+        inst.alive = False
+        if not inst.local:
+            self.spot_seconds += self.loop.now - inst.created_t
+        victims = inst.drain_all()
+        for r in victims:
+            r.status = Status.QUEUED
+            r.instance_id = None
+            self.queued.append(r)
+        self.instances.pop(inst.id, None)
+        self._dispatch()
+
+    # ------------------------------------------------------------------ #
+    # request lifecycle
+    # ------------------------------------------------------------------ #
+    def submit(self, reqs: List[Request]):
+        for r in reqs:
+            r.created_at = self.loop.now
+            r.status = Status.QUEUED
+            self.queued.append(r)
+        self._dispatch()
+
+    def _dispatch(self):
+        """SELECTINSTANCE with delayed dispatch for every held request."""
+        while self.queued:
+            inst_view = self.lb.select_instance(
+                list(self.live_instances()))
+            if inst_view is None:
+                return                           # all at Theta — hold
+            r = self.queued.pop(0)
+            self.instances[inst_view.id].assign(r)
+
+    def on_token(self, r: Request, inst: RolloutInstance):
+        if self.on_token_cb is not None:
+            self.on_token_cb(r)
+
+    def on_complete(self, r: Request, inst: RolloutInstance):
+        r.status = Status.DONE
+        r.completed_at = self.loop.now
+        if self.on_complete_cb is not None:
+            self.on_complete_cb(r)
+        self._dispatch()                          # delayed dispatch wakes up
+
+    # ------------------------------------------------------------------ #
+    # continuous load balancing
+    # ------------------------------------------------------------------ #
+    def _ensure_lb(self):
+        if not self._lb_running:
+            self._lb_running = True
+            self.loop.schedule(self.lb_period, self._lb_tick)
+
+    def _lb_tick(self):
+        live = list(self.live_instances())
+        if not live:
+            self._lb_running = False
+            return
+        orders = self.lb.rebalance(live)
+        for src_id, dst_id, n in orders:
+            src = self.instances.get(src_id)
+            dst = self.instances.get(dst_id)
+            if src is None or dst is None:
+                continue
+            moved = 0
+            # prefer pending requests; fall back to executing
+            candidates = [r.id for r in src.pending] + [
+                rid for rid in list(src.executing.keys())]
+            for rid in candidates[:n]:
+                r = src.take_back(rid)
+                if r is None:
+                    continue
+                r.n_migrations += 1
+                self.n_migrations += 1
+                dst.assign(r)
+                moved += 1
+        self.loop.schedule(self.lb_period, self._lb_tick)
+
+    # ------------------------------------------------------------------ #
+    def finalize_costs(self):
+        for inst in self.instances.values():
+            if inst.alive and not inst.local:
+                self.spot_seconds += self.loop.now - inst.created_t
+                inst.created_t = self.loop.now

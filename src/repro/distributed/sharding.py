@@ -1,0 +1,242 @@
+"""PartitionSpec rules for params, optimizer state, inputs and caches.
+
+Recipes
+-------
+``fsdp_tp`` (baseline used for the dry-run / roofline table):
+    batch over ("pod","data"); 2-D param sharding: TP dims (heads / d_ff /
+    experts / vocab) over "model", the d_model dim over "data" (ZeRO-style —
+    GSPMD all-gathers over data at use, reduce-scatters grads).  MoE experts
+    are E-sharded over "model" only (expert parallelism, matching the
+    shard_map dispatch in repro.models.moe).
+
+``pure_fsdp`` (paper-faithful FSDP analogue for §Perf comparisons):
+    batch over ("pod","data","model") — 256/512-way DP; every large param
+    leaf sharded over ("data","model") on its first big dim.  Dense archs
+    only (MoE needs EP).
+
+``tp_seqkv`` (beyond-paper decode optimization, §Perf):
+    like fsdp_tp but decode KV slabs are sharded over "model" on the
+    *sequence* dim (flash-decoding style) instead of the kv-heads dim —
+    removes head-padding waste when n_kv_heads < model-axis size.
+
+Head/expert counts that do not divide the model axis (qwen2-7b 28q/4kv,
+hymba 25q/5kv) are padded by GSPMD; the waste is visible in the roofline
+MODEL_FLOPS/HLO_FLOPs ratio and addressed in §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import ModelRuntime
+
+RECIPES = ("fsdp_tp", "pure_fsdp", "tp_seqkv")
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh, recipe: str) -> Tuple[str, ...]:
+    ax = mesh_axes(mesh)
+    if recipe == "pure_fsdp":
+        return tuple(a for a in ax if a in ("pod", "data", "model"))
+    return tuple(a for a in ax if a in ("pod", "data"))
+
+
+def make_runtime(cfg: ModelConfig, mesh: Optional[Mesh], recipe: str = "fsdp_tp",
+                 **kw) -> ModelRuntime:
+    if mesh is None:
+        return ModelRuntime(**kw)
+    model_axis = "model" if "model" in mesh.axis_names else None
+    ep = mesh.shape["model"] if (model_axis and cfg.mlp_kind == "moe"
+                                 and recipe != "pure_fsdp") else 1
+    return ModelRuntime(mesh=mesh, data_axes=batch_axes(mesh, recipe),
+                        model_axis=model_axis, ep_size=ep, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# divisibility sanitation
+# --------------------------------------------------------------------------- #
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """jit in/out boundary shardings require exact divisibility; drop any
+    axis assignment whose mesh extent does not divide the dim (the dropped
+    dim becomes replicated — interior ops may still shard it with padding).
+
+    Non-divisible cases in the assigned archs (documented in DESIGN.md §8):
+    qwen2-7b 28q heads, hymba 25q/5kv, hubert vocab 504, mamba2 vocab 50280,
+    hymba vocab 32001, ssm head counts, batch=1 (long_500k).
+    """
+    out = []
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, axes in enumerate(entries):
+        if axes is None or shape[dim] % _axes_size(mesh, axes) != 0:
+            # try dropping trailing axes of a tuple assignment first
+            if (axes is not None and isinstance(axes, tuple) and len(axes) > 1
+                    and shape[dim] % _axes_size(mesh, axes[:1]) == 0):
+                out.append(axes[0])
+            else:
+                out.append(None)
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def sanitize_tree(spec_tree, shape_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, leaf: sanitize_spec(s, leaf.shape, mesh),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------- #
+# parameter specs
+# --------------------------------------------------------------------------- #
+def _param_rule_fsdp_tp(path: str, ndim: int, shape) -> P:
+    """Rule on the *unstacked* (per-layer) shape."""
+    def named(*axes):
+        return P(*axes)
+
+    # vocab-parallel embeddings (replicated over data: keeps the unembed
+    # contraction un-sharded on D so logits need no data all-reduce)
+    if "'embed'" in path:                       # [V, D]
+        return P("model", None)
+    if "'lm_head'" in path:                     # [D, V]
+        return P(None, "model")
+    if re.search(r"'(wq|wk|wv)'", path):        # [D, H, dh]
+        return P("data", "model", None)
+    if re.search(r"'(bq|bk|bv)'", path):        # [H, dh]
+        return P("model", None)
+    if "'wo'" in path and "'attn'" in path:     # [H, dh, D]
+        return P("model", None, "data")
+    if "'experts'" in path:                     # [E, D, F] / [E, F, D]
+        return P("model", None, None)
+    if "'router'" in path:                      # [D, E] — replicated (shard_map)
+        return P(None, None)
+    if "'shared_gate'" in path:
+        return P(None, None)
+    if re.search(r"'(wi|wg)'", path):           # [D, F]
+        return P("data", "model")
+    if "'wo'" in path:                          # [F, D]
+        return P("model", "data")
+    if "'in_proj'" in path:                     # [D, d_in_proj]
+        return P("data", "model")
+    if "'out_proj'" in path:                    # [din, D]
+        return P("model", "data")
+    if "'conv_w'" in path:                      # [K, conv_dim]
+        return P(None, "model")
+    if "'conv_b'" in path:                      # [conv_dim]
+        return P("model")
+    # norms, A_log, D, dt_bias, scales — replicate
+    return P(*([None] * ndim))
+
+
+def _param_rule_pure_fsdp(path: str, ndim: int, shape) -> P:
+    """Shard the largest dim over ("data","model") combined."""
+    if ndim == 0 or max(shape) < 1024:
+        return P(*([None] * ndim))
+    big = int(np.argmax(shape))
+    spec = [None] * ndim
+    spec[big] = ("data", "model")
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, params_tree, recipe: str = "fsdp_tp",
+                mesh: Optional[Mesh] = None):
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays)."""
+    rule = (_param_rule_pure_fsdp if recipe == "pure_fsdp"
+            else _param_rule_fsdp_tp)
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        stacked = "'groups'" in pstr            # leading n_groups dim
+        if stacked:
+            base = rule(pstr, len(shape) - 1, shape[1:])
+            return P(None, *base)
+        return rule(pstr, len(shape), shape)
+
+    specs = jax.tree_util.tree_map_with_path(one, params_tree)
+    if mesh is not None:
+        specs = sanitize_tree(specs, params_tree, mesh)
+    return specs
+
+
+def opt_specs(cfg: ModelConfig, opt_tree, pspecs):
+    """Optimizer state mirrors param sharding (m, v, master)."""
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "master": pspecs,
+        "count": P(),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# input / cache specs
+# --------------------------------------------------------------------------- #
+def train_batch_specs(mesh: Mesh, recipe: str, batch: Dict[str, Any]):
+    b = batch_axes(mesh, recipe)
+    out = {}
+    for k, v in batch.items():
+        nd = len(v.shape)
+        out[k] = sanitize_spec(P(b, *([None] * (nd - 1))), v.shape, mesh)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh, recipe: str):
+    """Decode-cache specs: batch-sharded; kv-heads over "model" when they
+    divide the axis, otherwise the *sequence* dim (flash-decoding style —
+    also forced by the tp_seqkv recipe); group-stacked leaves get a leading
+    None."""
+    b = batch_axes(mesh, recipe)
+    msize = mesh.shape.get("model", 1)
+    head_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % msize == 0
+    seq_kv = recipe == "tp_seqkv" or not head_ok
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        stacked = "'groups'" in pstr
+        lead = (None,) if stacked else ()
+        base_nd = nd - len(lead)
+        if pstr.endswith("['pos']"):
+            spec = P(b)
+        elif re.search(r"\['(k|v)'\]$", pstr):    # [B, T, K, dh]
+            if seq_kv:
+                spec = P(*lead, b, "model", None, None)
+            else:
+                spec = P(*lead, b, None, "model", None)
+        elif pstr.endswith("['conv']"):           # [B, K-1, conv_dim]
+            spec = P(*lead, b, None, "model")
+        elif pstr.endswith("['ssm']"):            # [B, H, P, N]
+            spec = P(*lead, b, None, "model", None)
+        else:
+            spec = P(*lead, b, *([None] * (base_nd - 1)))
+        return sanitize_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
+    """q: [B, H, S, d]; k/v: [B, K, S, d] -> [B, H, S, d] (f32 math)."""
+    B, H, S, d = q.shape
+    K = k.shape[1]
+    G = H // K
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = pos[:, None] >= pos[None, :]
+    if window:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, window=0, cap=0.0):
+    """q: [B, H, d]; k/v: [B, K, T, d]; lengths: [B] valid prefix lengths.
+
+    Slot t of the cache holds absolute position t (slab layout).
+    Returns [B, H, d].
+    """
+    B, H, d = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=1)
+    s = jnp.einsum("bhd,bhtd->bht", qf, kf)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    t = jnp.arange(T)[None, :]
+    mask = t < lengths[:, None]
+    if window:
+        mask &= (lengths[:, None] - 1 - t) < window
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", p, vf).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk=None):
+    """Sequential SSD recurrence oracle (mathematically exact, O(L) steps).
+
+    x: [b, L, H, P]; dt: [b, L, H]; A: [H] (negative); B/C: [b, L, G, N].
+    Returns (y [b, L, H, P], final_state [b, H, P, N]).
+    """
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp            # [b,H,P],[b,H],[b,H,N],[b,H,N]
+        dA = jnp.exp(dtt * Af[None, :])
+        state = (state * dA[..., None, None]
+                 + jnp.einsum("bhn,bhp->bhpn", Bt, xt * dtt[..., None]))
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, state)
+        return state, y
+
+    state0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+          Bf.swapaxes(0, 1), Cf.swapaxes(0, 1))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), final

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory / cost / roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+
+Results are cached as JSON under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ASSIGNED_ARCHS, cell_status, get_config
+from repro.configs.shapes import ShapeSpec
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis as hla
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import step_for_shape
+from repro.models.transformer import ModelRuntime
+
+OUTDIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _attach(sds_tree, spec_tree, mesh):
+    from jax.sharding import NamedSharding
+
+    def one(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(one, sds_tree, spec_tree)
+
+
+def _shard_bytes(sds_tree):
+    """Per-device bytes of the (possibly padded) shards of a SDS pytree."""
+    total = 0
+    for leaf in jax.tree.leaves(sds_tree):
+        shp = leaf.sharding.shard_shape(leaf.shape)
+        n = 1
+        for d in shp:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def model_flops(cfg, shape: ShapeSpec) -> dict:
+    """Useful-work FLOPs: 6*N_active*T (train) / 2*N_active*T (inference),
+    plus the causal-attention quadratic term reported separately."""
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    Hdh = cfg.n_heads * cfg.head_dim
+    mixers = cfg.layer_mixers()
+    n_attn = sum(m in ("global", "local", "hybrid") for m in mixers)
+    n_local = sum(m in ("local", "hybrid") for m in mixers) if cfg.window else 0
+    if shape.kind == "train":
+        T = B * S
+        base = 6.0 * N * T
+        eff = [min(S, cfg.window) if (cfg.window and m in ("local", "hybrid"))
+               else S for m in mixers if m in ("global", "local", "hybrid")]
+        attn = sum(3.0 * 2.0 * B * S * e * Hdh for e in eff)  # fwd+bwd, causal/2
+    elif shape.kind == "prefill":
+        T = B * S
+        base = 2.0 * N * T
+        eff = [min(S, cfg.window) if (cfg.window and m in ("local", "hybrid"))
+               else S for m in mixers if m in ("global", "local", "hybrid")]
+        attn = sum(2.0 * B * S * e * Hdh for e in eff)
+    else:  # decode: one token per slot
+        T = B
+        base = 2.0 * N * T
+        eff = [min(S, cfg.window) if (cfg.window and m in ("local", "hybrid"))
+               else S for m in mixers if m in ("global", "local", "hybrid")]
+        attn = sum(4.0 * B * e * Hdh for e in eff)
+    return {"model_flops": base, "model_attn_flops": attn, "tokens": T}
+
+
+def _base_recipe(recipe: str) -> str:
+    return "fsdp_tp" if recipe == "fsdp_tp_pad" else recipe
+
+
+def build_cell(cfg, shape: ShapeSpec, mesh, recipe: str):
+    recipe = _base_recipe(recipe)
+    """Returns (jitted_fn, arg_sds_with_shardings tuple)."""
+    rt = shd.make_runtime(cfg, mesh, _base_recipe(recipe),
+                          remat=(shape.kind == "train"),
+                          q_block=512 if shape.seq_len <= 8192 else 1024)
+    step = step_for_shape(cfg, rt, shape)
+    specs = input_specs(cfg, shape)
+    b = shd.batch_axes(mesh, recipe)
+    from jax.sharding import PartitionSpec as P
+
+    if shape.kind == "train":
+        pspecs = shd.param_specs(cfg, specs["state"]["params"], recipe, mesh=mesh)
+        state_specs = {"params": pspecs,
+                       "opt": shd.opt_specs(cfg, specs["state"]["opt"], pspecs)}
+        batch_specs = shd.train_batch_specs(mesh, recipe, specs["batch"])
+        args = (_attach(specs["state"], state_specs, mesh),
+                _attach(specs["batch"], batch_specs, mesh))
+        fn = jax.jit(step, out_shardings=(
+            shd.to_named(state_specs, mesh), None), donate_argnums=(0,))
+    elif shape.kind == "prefill":
+        pspecs = shd.param_specs(cfg, specs["params"], recipe, mesh=mesh)
+        batch_specs = shd.train_batch_specs(mesh, recipe, specs["batch"])
+        cache_sds = jax.eval_shape(step, specs["params"], specs["batch"])[1]
+        cspecs = shd.cache_specs(cfg, cache_sds, mesh, recipe)
+        args = (_attach(specs["params"], pspecs, mesh),
+                _attach(specs["batch"], batch_specs, mesh))
+        nspec = shd.sanitize_spec(P(b), (shape.global_batch,), mesh)
+        fn = jax.jit(step, out_shardings=(
+            jax.NamedSharding(mesh, nspec), shd.to_named(cspecs, mesh)))
+    else:  # decode
+        pspecs = shd.param_specs(cfg, specs["params"], recipe, mesh=mesh)
+        cspecs = shd.cache_specs(cfg, specs["cache"], mesh, recipe)
+        nspec = shd.sanitize_spec(P(b), (shape.global_batch,), mesh)
+        args = (_attach(specs["params"], pspecs, mesh),
+                _attach(specs["cache"], cspecs, mesh),
+                _attach(specs["tokens"], nspec, mesh))
+        fn = jax.jit(step, out_shardings=(
+            jax.NamedSharding(mesh, nspec), shd.to_named(cspecs, mesh)),
+            donate_argnums=(1,))
+    return fn, args
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             recipe: str = "fsdp_tp", outdir: Path = OUTDIR,
+             save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    if recipe == "fsdp_tp_pad":
+        from repro.configs.base import padded_variant
+        cfg = padded_variant(cfg)
+    shape = SHAPES[shape_name]
+    meshname = "pod2" if multi_pod else "pod1"
+    rec = {"arch": arch, "shape": shape_name, "mesh": meshname,
+           "recipe": recipe, "ok": False}
+    ok, why = cell_status(cfg, shape)
+    if not ok:
+        rec.update(skipped=True, skip_reason=why, ok=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rec["chips"] = chips
+    t0 = time.time()
+    fn, args = build_cell(cfg, shape, mesh, recipe)
+    lowered = fn.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    # ---- memory ----
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis"] = {"error": str(e)}
+    rec["arg_bytes_per_device"] = int(sum(_shard_bytes(a) for a in args))
+
+    # ---- cost analysis (raw; loop bodies counted once) ----
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: float(ca[k]) for k in
+                                ("flops", "bytes accessed") if k in ca}
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": str(e)}
+
+    # ---- HLO analysis with loop multipliers (per-device) ----
+    txt = compiled.as_text()
+    rec["hlo_chars"] = len(txt)
+    s = hla.analyze(txt)
+    if save_hlo:
+        (outdir / f"{arch}__{shape_name}__{meshname}__{recipe}.hlo.txt"
+         ).write_text(txt)
+    del txt
+    rec["hlo"] = {
+        "dot_flops_per_dev": s.dot_flops,
+        "collective_bytes_per_dev": s.collective_bytes,
+        "traffic_bytes_per_dev": s.traffic_bytes,
+        "collectives": s.collectives,
+        "collective_counts": s.collective_counts,
+        "while_trips": s.while_trips,
+    }
+
+    g_flops = s.dot_flops * chips
+    g_bytes = s.traffic_bytes * chips
+    g_coll = s.collective_bytes * chips
+    mf = model_flops(cfg, shape)
+    rec.update(mf)
+    rec["global_hlo_flops"] = g_flops
+    rec["global_traffic_bytes"] = g_bytes
+    rec["global_collective_bytes"] = g_coll
+    rec["useful_ratio"] = (mf["model_flops"] + mf["model_attn_flops"]) / max(g_flops, 1.0)
+    rec["roofline"] = hla.roofline_terms(
+        global_flops=g_flops, global_bytes=g_bytes,
+        global_collective_bytes=g_coll, chips=chips)
+    rec["ok"] = True
+    return rec
+
+
+def cell_path(outdir, arch, shape_name, meshname, recipe):
+    return outdir / f"{arch}__{shape_name}__{meshname}__{recipe}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--recipe", default="fsdp_tp")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--outdir", default=str(OUTDIR))
+    args = ap.parse_args()
+    outdir = Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    meshname = "pod2" if args.multi_pod else "pod1"
+    failures = 0
+    for arch, shape_name in cells:
+        path = cell_path(outdir, arch, shape_name, meshname, args.recipe)
+        if args.skip_existing and path.exists():
+            prev = json.loads(path.read_text())
+            if prev.get("ok"):
+                print(f"[skip] {path.name}")
+                continue
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape_name, multi_pod=args.multi_pod,
+                           recipe=args.recipe, outdir=outdir,
+                           save_hlo=args.save_hlo)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape_name, "mesh": meshname,
+                   "recipe": args.recipe, "ok": False, "error": str(e),
+                   "traceback": traceback.format_exc()}
+            failures += 1
+        rec["wall_s"] = round(time.time() - t0, 1)
+        path.write_text(json.dumps(rec, indent=2, default=float))
+        status = ("SKIP(" + rec.get("skip_reason", "")[:40] + ")"
+                  if rec.get("skipped") else ("OK" if rec["ok"] else "FAIL"))
+        bn = rec.get("roofline", {}).get("bottleneck", "-")
+        print(f"[{status}] {arch} {shape_name} {meshname} {args.recipe} "
+              f"wall={rec['wall_s']}s bottleneck={bn}", flush=True)
+        if not rec["ok"]:
+            print(rec.get("error", ""), flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

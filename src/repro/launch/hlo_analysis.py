@@ -1,0 +1,280 @@
+"""Post-SPMD HLO text analysis: FLOPs, traffic and collective bytes with
+*loop trip-count multipliers*.
+
+Why this exists: ``compiled.cost_analysis()`` visits a ``while`` body exactly
+once, so a scan-over-layers model under-reports FLOPs/bytes by ~n_layers
+(validated empirically — see EXPERIMENTS.md §Roofline methodology).  This
+module parses ``compiled.as_text()`` (the partitioned per-device module),
+reconstructs the computation call graph, extracts while-loop trip counts from
+their condition computations, and accumulates:
+
+  * dot FLOPs        — 2 * prod(output_dims) * prod(lhs contracting dims)
+  * collective bytes — operand-size semantics per collective kind
+  * traffic proxy    — operand+output bytes of substantive instructions
+                       (an unfused upper-estimate of HBM traffic)
+
+All numbers are PER DEVICE (the module is the SPMD per-device program);
+multiply by device count for global figures.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+
+
+def _parse_shape(type_str: str) -> Tuple[int, int]:
+    """'f32[8,512]' -> (elements, bytesize). Tuple types: sum components."""
+    total_elems, total_bytes = 0, 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_elems += elems
+        total_bytes += elems * DTYPE_BYTES[dt]
+    return total_elems, total_bytes
+
+
+@dataclass
+class Instruction:
+    name: str
+    op: str
+    out_bytes: int
+    out_elems: int
+    out_dims: List[int]
+    operands: List[str]
+    attrs: str
+    raw: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    instrs: List[Instruction] = field(default_factory=list)
+    by_name: Dict[str, Instruction] = field(default_factory=dict)
+    param_shapes: Dict[str, Tuple[int, int]] = field(default_factory=dict)
+
+
+_OPS_OF_INTEREST = re.compile(
+    r"\b(dot|while|fusion|call|conditional|"
+    + "|".join(COLLECTIVES) + r")\b")
+
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "iota", "get-dimension-size"}
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):  # computation header
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                for pm in re.finditer(r"([\w\.\-]+):\s*([^,)]+)", m.group(3) or ""):
+                    cur.param_shapes[pm.group(1)] = _parse_shape(pm.group(2))
+            continue
+        if cur is None:
+            continue
+        line = re.sub(r"/\*.*?\*/", "", line)  # strip /*index=N*/ comments
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # "TYPE op(args), attrs"
+        tm = re.match(r"([a-z0-9_\[\],\{\} ()]*?)\s+([\w\-]+)\((.*)$", rest)
+        if not tm:
+            continue
+        type_str, op, tail = tm.group(1), tm.group(2), tm.group(3)
+        elems, nbytes = _parse_shape(type_str)
+        # output dims (first non-tuple shape)
+        dm = _SHAPE_RE.search(type_str)
+        dims = ([int(d) for d in dm.group(2).split(",") if d]
+                if (dm and dm.group(2)) else [])
+        args_part = tail.split(")", 1)[0]
+        operands = re.findall(r"%([\w\.\-]+)", args_part)
+        instr = Instruction(name=name, op=op, out_bytes=nbytes,
+                            out_elems=elems, out_dims=dims,
+                            operands=operands, attrs=tail, raw=line)
+        cur.instrs.append(instr)
+        cur.by_name[name] = instr
+    return comps
+
+
+def _trip_count_from_config(ins: Instruction) -> Optional[int]:
+    """XLA records known trip counts in the while's backend_config."""
+    m = re.search(r'"known_trip_count":\s*\{"n":"(\d+)"\}', ins.raw)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the while condition (scan induction bound)."""
+    best = 1
+    for ins in cond.instrs:
+        for m in re.finditer(r"constant\((\d+)\)", ins.raw):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _operand_bytes(comp: Computation, ins: Instruction) -> int:
+    total = 0
+    for o in ins.operands:
+        if o in comp.by_name:
+            total += comp.by_name[o].out_bytes
+        elif o in comp.param_shapes:
+            total += comp.param_shapes[o][1]
+    return total
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return max(1, int(m.group(2)))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+@dataclass
+class HloSummary:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    traffic_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    while_trips: Dict[str, int] = field(default_factory=dict)
+
+
+def analyze(text: str) -> HloSummary:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # multipliers via memoized recursion over the call graph
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    order = [entry.name]
+    seen = {entry.name}
+    # BFS, since calls are acyclic
+    i = 0
+    while i < len(order):
+        comp = comps[order[i]]
+        m = mult[comp.name]
+        i += 1
+        for ins in comp.instrs:
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+                if bm and bm.group(1) in comps:
+                    trips = _trip_count_from_config(ins)
+                    if trips is None and cm and cm.group(1) in comps:
+                        trips = _trip_count(comps[cm.group(1)])
+                    mult[bm.group(1)] += m * (trips or 1)
+                    if bm.group(1) not in seen:
+                        seen.add(bm.group(1)); order.append(bm.group(1))
+            elif ins.op in ("call", "conditional", "async-start"):
+                for target in re.findall(
+                        r"(?:to_apply|called_computations)=\{?%?([\w\.\-]+)",
+                        ins.attrs):
+                    if target in comps:
+                        mult[target] += m
+                        if target not in seen:
+                            seen.add(target); order.append(target)
+            # fusions excluded on purpose: dots/collectives stay top-level
+
+    s = HloSummary()
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                k = 1
+                km = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+                if km and km.group(1) and ins.operands:
+                    lhs = ins.operands[0]
+                    lhs_dims = None
+                    if lhs in comp.by_name:
+                        lhs_dims = comp.by_name[lhs].out_dims
+                    elif lhs in comp.param_shapes:
+                        pass
+                    if lhs_dims:
+                        for ci in km.group(1).split(","):
+                            ci = int(ci)
+                            if ci < len(lhs_dims):
+                                k *= lhs_dims[ci]
+                s.dot_flops += m * 2.0 * ins.out_elems * k
+            if ins.op in COLLECTIVES or any(
+                    ins.op.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if ins.op.startswith(c))
+                gs = _group_size(ins.attrs)
+                if kind == "all-gather":
+                    nbytes = ins.out_bytes / gs      # operand = shard
+                elif kind == "reduce-scatter":
+                    nbytes = ins.out_bytes * gs      # operand = full
+                else:
+                    nbytes = ins.out_bytes
+                s.collective_bytes += m * nbytes
+                s.collectives[kind] = s.collectives.get(kind, 0.0) + m * nbytes
+                s.collective_counts[kind] = (
+                    s.collective_counts.get(kind, 0.0) + m)
+            if ins.op not in _SKIP_TRAFFIC and ins.op != "while":
+                # produce-once accounting: every tensor is charged where it
+                # is produced (operands were charged at their producers);
+                # entry parameters are charged separately below.
+                s.traffic_bytes += m * ins.out_bytes
+            if ins.op == "while":
+                trips = _trip_count_from_config(ins)
+                if trips is None:
+                    cm = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+                    if cm and cm.group(1) in comps:
+                        trips = _trip_count(comps[cm.group(1)])
+                s.while_trips[ins.name] = trips or 1
+    # parameters (weights/optimizer/caches) are read once per execution
+    s.traffic_bytes += sum(b for _, b in entry.param_shapes.values())
+    return s
+
+
+# --------------------------------------------------------------------------- #
+# roofline terms (TPU v5e)
+# --------------------------------------------------------------------------- #
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def roofline_terms(*, global_flops: float, global_bytes: float,
+                   global_collective_bytes: float, chips: int) -> Dict:
+    compute_s = global_flops / (chips * PEAK_FLOPS_BF16)
+    memory_s = global_bytes / (chips * HBM_BW)
+    collective_s = global_collective_bytes / (chips * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    return terms

@@ -1,0 +1,87 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the cell's step
+function:
+
+  train   -> {"state": ..., "batch": {...}}                (GRPO / supervised)
+  prefill -> {"params": ..., "batch": {tokens|embeds}}
+  decode  -> {"params": ..., "cache": ..., "tokens": ...}
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import kv_cache as kvc
+from repro.models.transformer import init_params
+from repro.optim import adamw
+
+SLAB_MARGIN = 128  # decode slab headroom beyond the nominal context length
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda p: adamw.init(p), params)
+    return {"params": params, "opt": opt}
+
+
+def train_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if not cfg.is_decoder:  # encoder: supervised masked prediction
+        return {
+            "embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+            "labels": sds((B, S), jnp.int32),
+            "mask": sds((B, S), jnp.float32),
+        }
+    batch = {
+        "response_mask": sds((B, S), jnp.float32),
+        "advantages": sds((B,), jnp.float32),
+        "behavior_logprobs": sds((B, S), jnp.float32),
+    }
+    if cfg.input_mode == "embeds":  # vlm backbone: projected patch+text embeds
+        batch["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = sds((B, S), jnp.int32)  # realized text tokens (loss)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def prefill_batch_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.input_mode == "embeds":
+        return {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def decode_cache_spec(cfg: ModelConfig, shape: ShapeSpec,
+                      cache_dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq_len
+    slab = S + SLAB_MARGIN
+    return jax.eval_shape(lambda: kvc.init_cache(cfg, B, slab, cache_dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    if shape.kind == "train":
+        return {"state": abstract_state(cfg),
+                "batch": train_batch_spec(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": abstract_params(cfg),
+                "batch": prefill_batch_spec(cfg, shape)}
+    # decode
+    B = shape.global_batch
+    return {
+        "params": abstract_params(cfg),
+        "cache": decode_cache_spec(cfg, shape),
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }

@@ -1,0 +1,61 @@
+"""Step functions lowered by the dry-run and used by benchmarks/examples.
+
+  train_step(state, batch)            -> (state, metrics)
+  prefill_step(params, batch)         -> (next_tokens [B], cache)
+  serve_step(params, cache, tokens)   -> (next_tokens [B], cache)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import kv_cache as kvc
+from repro.models.transformer import (ModelRuntime, decode_step, forward,
+                                      logits_from_hidden)
+from repro.rl import grpo
+from repro.launch.specs import SLAB_MARGIN
+
+
+def build_train_step(cfg: ModelConfig, rt: ModelRuntime, *, lr: float = 1e-5,
+                     kl_coef: float = 0.0):
+    loss_kind = "grpo" if cfg.is_decoder else "supervised"
+    return grpo.make_train_step(cfg, rt, lr=lr, kl_coef=kl_coef,
+                                loss_kind=loss_kind)
+
+
+def build_prefill_step(cfg: ModelConfig, rt: ModelRuntime, *, slab_len: int,
+                       cache_dtype=jnp.bfloat16):
+    def prefill_step(params, batch: Dict):
+        x = batch.get("tokens", batch.get("embeds"))
+        B = x.shape[0]
+        cache = kvc.init_cache(cfg, B, slab_len, cache_dtype)
+        out = forward(params, cfg, rt, tokens=batch.get("tokens"),
+                      embeds=batch.get("embeds"), cache=cache, mode="prefill")
+        last = out["hidden"][:, -1]
+        logits = logits_from_hidden(params, cfg, last)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, out["cache"]
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, rt: ModelRuntime):
+    def serve_step(params, cache, tokens):
+        out = decode_step(params, cfg, rt, tokens, cache)
+        logits = logits_from_hidden(params, cfg, out["hidden"][:, 0])
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, out["cache"]
+    return serve_step
+
+
+def step_for_shape(cfg: ModelConfig, rt: ModelRuntime, shape: ShapeSpec):
+    if shape.kind == "train":
+        return build_train_step(cfg, rt)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, rt, slab_len=shape.seq_len + SLAB_MARGIN)
+    return build_serve_step(cfg, rt)

@@ -1,0 +1,12 @@
+from repro.models.transformer import (  # noqa: F401
+    CPU_RT,
+    ModelRuntime,
+    decode_step,
+    forward,
+    init_params,
+    logits_from_hidden,
+    prefill,
+    token_logprobs,
+    unembed_matrix,
+)
+from repro.models import kv_cache  # noqa: F401

@@ -1,0 +1,145 @@
+"""Decode caches: global KV slabs, ring-buffer window caches, SSM states.
+
+Cache pytree layout mirrors the parameter layout so it scans with the layers:
+
+  cache = {
+    "pos":    [B] int32  — number of tokens already processed per slot,
+    "prefix": {str(i): layer_cache},
+    "groups": {f"sub{j}": layer_cache with leading n_groups dim},
+    "suffix": {str(i): layer_cache},
+  }
+
+Layer caches by mixer kind:
+  global attn: {"k": [B, T_slab, K, dh], "v": ...}          (slot t = position t)
+  local attn:  {"k": [B, W, K, dh], "v": ...}               (ring: slot = p % W)
+  mamba:       {"conv": [B, K-1, conv_dim], "ssm": [B, H, P, N]}
+  hybrid:      {"k","v" (ring), "conv","ssm"}
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import init_mamba_cache
+
+
+def attn_cache_shape(cfg, mixer: str, batch: int, slab_len: int):
+    if mixer == "global":
+        T = slab_len
+    else:  # local / hybrid ring buffer
+        T = min(cfg.window, slab_len) if cfg.window else slab_len
+    return (batch, T, cfg.n_kv_heads, cfg.head_dim)
+
+
+def init_layer_cache(cfg, mixer: str, batch: int, slab_len: int, dtype):
+    c: Dict = {}
+    if mixer in ("global", "local", "hybrid"):
+        shape = attn_cache_shape(cfg, mixer, batch, slab_len)
+        c["k"] = jnp.zeros(shape, dtype)
+        c["v"] = jnp.zeros(shape, dtype)
+    if mixer in ("mamba", "hybrid"):
+        c.update(init_mamba_cache(cfg, batch))
+    return c
+
+
+def init_cache(cfg, batch: int, slab_len: int, dtype=jnp.bfloat16):
+    """Fresh decode cache for the whole model."""
+    mixers = cfg.layer_mixers()
+    cache = {"pos": jnp.zeros((batch,), jnp.int32),
+             "prefix": {}, "groups": {}, "suffix": {}}
+    for i in range(cfg.first_k_dense):
+        cache["prefix"][str(i)] = init_layer_cache(cfg, mixers[i], batch,
+                                                   slab_len, dtype)
+    G = cfg.n_groups
+    for j, mixer in enumerate(cfg.pattern):
+        one = init_layer_cache(cfg, mixer, batch, slab_len, dtype)
+        cache["groups"][f"sub{j}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (G,) + t.shape).copy()
+            if G else t[None][:0], one)
+    n_pre = cfg.first_k_dense + G * cfg.group_size
+    for i, mixer in enumerate(cfg.suffix_pattern):
+        cache["suffix"][str(i)] = init_layer_cache(cfg, mixer, batch,
+                                                   slab_len, dtype)
+    return cache
+
+
+def _batch_axis(path) -> int:
+    """Batch dim index for a cache leaf (group-stacked leaves lead with G)."""
+    pstr = jax.tree_util.keystr(path)
+    return 1 if "'groups'" in pstr else 0
+
+
+def slice_batch(cache, idx, size: int = 1):
+    """Slice `size` batch rows at `idx` (traced ok) from every cache leaf."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, c: jax.lax.dynamic_slice_in_dim(c, idx, size,
+                                                  _batch_axis(p)), cache)
+
+
+def update_batch(cache, row, idx):
+    """Write a sliced row (batch size 1) back at batch position idx."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, c, r: jax.lax.dynamic_update_slice_in_dim(
+            c, r.astype(c.dtype), idx, _batch_axis(p)), cache, row)
+
+
+def ring_positions(pos, W: int):
+    """Absolute position stored in each ring slot; -1 for empty.
+
+    pos: [B] current length. Returns [B, W] int32.
+    """
+    s = jnp.arange(W, dtype=jnp.int32)[None, :]
+    p = ((pos[:, None] - 1 - s) // W) * W + s
+    return jnp.where(p >= 0, p, -1)
+
+
+def slab_positions(pos, T: int):
+    """[B, T]: slot t holds position t if t < pos else -1."""
+    t = jnp.arange(T, dtype=jnp.int32)[None, :]
+    return jnp.where(t < pos[:, None], t, -1)
+
+
+def write_decode_kv(cache_k, cache_v, new_k, new_v, pos, *, ring: bool, W: int):
+    """Write one token's K/V at per-slot positions.
+
+    cache_k/v: [B, T, K, dh]; new_k/v: [B, 1, K, dh]; pos: [B].
+    """
+    B = cache_k.shape[0]
+    idx = (pos % W) if ring else pos
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, idx].set(new_k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, idx].set(new_v[:, 0].astype(cache_v.dtype))
+    return cache_k, cache_v
+
+
+def prefill_fill_slab(cache_k, cache_v, k, v):
+    """Place prefill K/V [B, L, K, dh] at slab slots 0..L-1."""
+    L = k.shape[1]
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), 0, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), 0, axis=1)
+    return cache_k, cache_v
+
+
+def prefill_fill_ring(cache_k, cache_v, k, v, W: int, lens=None):
+    """Fill a ring buffer from a full prefill: position p -> slot p % W.
+
+    lens [B]: true lengths for right-padded prefill (slots map to the last
+    real positions, not padding)."""
+    B, L = k.shape[0], k.shape[1]
+    if lens is None:
+        lens = jnp.full((B,), L, jnp.int32)
+    s = jnp.arange(W, dtype=jnp.int32)[None, :]
+    p = ((lens[:, None] - 1 - s) // W) * W + s      # [B, W]; <0 => empty
+    valid = p >= 0
+    src = jnp.clip(p, 0, max(L - 1, 0))
+    kk = jnp.take_along_axis(k, src[:, :, None, None], axis=1)
+    vv = jnp.take_along_axis(v, src[:, :, None, None], axis=1)
+    m = valid[:, :, None, None]
+    cache_k = jnp.where(m, kk.astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(m, vv.astype(cache_v.dtype), cache_v)
+    return cache_k, cache_v

@@ -1,0 +1,77 @@
+"""Shared neural-net building blocks (pure jnp, GSPMD-friendly)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6, zero_centered: bool = True):
+    """RMSNorm in f32.  ``zero_centered`` follows the gemma (1+scale) trick —
+    harmless for other families because init sets scale accordingly."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if zero_centered:
+        w = 1.0 + w
+    return (y * w).astype(dt)
+
+
+def softcap(x, cap: float):
+    """Logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(x, wi, wg, wo, bias=None):
+    """SwiGLU MLP: silu(x@wg) * (x@wi) @ wo."""
+    h = jax.nn.silu(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+def embed_tokens(embed, tokens, scale: bool, d_model: int):
+    x = jnp.take(embed, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(d_model), dtype=x.dtype)
+    return x
+
+
+def unembed(x, table_or_head, tied: bool, final_cap: float = 0.0):
+    """Project hidden states to vocabulary logits (f32)."""
+    if tied:
+        logits = jnp.einsum("...d,vd->...v", x, table_or_head)
+    else:
+        logits = x @ table_or_head
+    logits = logits.astype(jnp.float32)
+    if final_cap:
+        logits = softcap(logits, final_cap)
+    return logits
+
+
+# --------------------------------------------------------------------------- #
+# initialisers
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, in_axis_size, dtype):
+    std = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "wg": dense_init(k2, (d_model, d_ff), d_model, dtype),
+        "wo": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def apply_mlp(params, x):
+    return swiglu(x, params["wi"], params["wg"], params["wo"])

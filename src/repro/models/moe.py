@@ -1,0 +1,185 @@
+"""Mixture-of-Experts layer with expert parallelism.
+
+Design (TPU-native, roofline-clean):
+  * Routing + capacity-bucketed dispatch are computed with gathers/scatters,
+    NOT the GShard one-hot dispatch einsum — the einsum would add
+    2*T*E*C*D fake FLOPs per layer and poison the compute roofline.
+  * Expert parallelism runs inside ``shard_map`` over the "model" mesh axis:
+    tokens are data-sharded / model-replicated, each model rank owns
+    E/ep_size experts, gathers its tokens locally, runs the expert FFNs,
+    scatter-adds weighted outputs, and a single psum over "model" combines.
+    The psum replaces an all-to-all pair (baseline; §Perf explores a2a).
+  * Shared experts (qwen2-moe / deepseek-moe) run as a dense SwiGLU outside
+    the shard_map (TP-sharded like any dense FFN).
+
+Capacity: C = clip(ceil(top_k * T_local / E * capacity_factor), 1, T_local).
+Dropped tokens contribute zero to the combine (standard capacity semantics).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init
+
+
+def init_moe_params(key, cfg, dtype):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    Ep = cfg.n_experts_padded
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (D, E), D, jnp.float32),
+        "experts": {
+            "wi": dense_init(ks[1], (Ep, D, F), D, dtype),
+            "wg": dense_init(ks[2], (Ep, D, F), D, dtype),
+            "wo": dense_init(ks[3], (Ep, F, D), F, dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * F
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": dense_init(k1, (D, Fs), D, dtype),
+            "wg": dense_init(k2, (D, Fs), D, dtype),
+            "wo": dense_init(k3, (Fs, D), Fs, dtype),
+        }
+        if cfg.shared_expert_gate:
+            p["shared_gate"] = dense_init(ks[5], (D, 1), D, jnp.float32)
+    return p
+
+
+DROPLESS_THRESHOLD = 1024  # token counts at/below this use dropless dispatch
+
+
+def _capacity(T: int, E: int, top_k: int, cf: float) -> int:
+    """Expert capacity.  Small batches (decode / tiny prefills) run dropless
+    (C = T) so generation quality and prefill->decode consistency are exact;
+    large training/prefill batches use the standard capacity formula."""
+    if T <= DROPLESS_THRESHOLD or cf <= 0:
+        return T
+    return max(1, min(T, int(math.ceil(top_k * T / E * cf))))
+
+
+def _route(x_flat, router, top_k, E_pad: int):
+    """Returns (top_vals [T,k] f32, top_ids [T,k] i32, probs [T,E] f32).
+
+    Routing happens over the *real* experts; ids index the padded range
+    (padded experts are never selected)."""
+    logits = (x_flat.astype(jnp.float32) @ router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = logits.shape[-1]
+    if E_pad > E:
+        probs_p = jnp.pad(probs, ((0, 0), (0, E_pad - E)))
+    else:
+        probs_p = probs
+    top_vals, top_ids = jax.lax.top_k(probs_p, top_k)
+    return top_vals, top_ids, probs
+
+
+def _dispatch_tables(top_vals, top_ids, E: int, C: int):
+    """Capacity-bucketed dispatch tables.
+
+    Returns idx_table [E, C] (token index feeding each expert slot) and
+    w_table [E, C] (combine weight; 0 for empty slots).
+    """
+    T, k = top_ids.shape
+    flat_e = top_ids.reshape(-1)                       # [T*k]
+    flat_w = top_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) * onehot).sum(axis=-1) - 1  # [T*k]
+    keep = pos_in_e < C
+    e_idx = jnp.where(keep, flat_e, E)                 # dummy row E
+    p_idx = jnp.where(keep, pos_in_e, 0)
+    idx_table = jnp.zeros((E + 1, C), jnp.int32).at[e_idx, p_idx].set(flat_tok)
+    w_table = jnp.zeros((E + 1, C), jnp.float32).at[e_idx, p_idx].set(flat_w)
+    return idx_table[:E], w_table[:E]
+
+
+def _expert_ffn(xg, wi, wg, wo):
+    """xg: [E_loc, C, D]; weights [E_loc, D, F] / [E_loc, F, D]."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xg, wi)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _moe_local(x_flat, router, wi, wg, wo, *, first_expert, E, E_pad, top_k,
+               cf):
+    """Per-shard MoE body.  x_flat: [T_loc, D]; wi/wg/wo: local expert slices.
+
+    Returns (partial_out [T_loc, D] — still needs psum over EP axis,
+             aux_loss scalar).
+    """
+    T, D = x_flat.shape
+    E_loc = wi.shape[0]
+    C = _capacity(T, E, top_k, cf)
+
+    top_vals, top_ids, probs = _route(x_flat, router, top_k, E_pad)
+    idx_table, w_table = _dispatch_tables(top_vals, top_ids, E_pad, C)
+
+    idx_loc = jax.lax.dynamic_slice_in_dim(idx_table, first_expert, E_loc, 0)
+    w_loc = jax.lax.dynamic_slice_in_dim(w_table, first_expert, E_loc, 0)
+
+    xg = jnp.take(x_flat, idx_loc.reshape(-1), axis=0).reshape(E_loc, C, D)
+    y = _expert_ffn(xg, wi, wg, wo) * w_loc[..., None].astype(x_flat.dtype)
+    out = jnp.zeros((T, D), x_flat.dtype).at[idx_loc.reshape(-1)].add(
+        y.reshape(-1, D))
+
+    # switch-style load-balance aux (computed replicated across EP ranks)
+    assign = jax.nn.one_hot(top_ids, E, dtype=jnp.float32).sum(axis=1)  # [T,E]
+    f = assign.mean(axis=0) / top_k
+    p_mean = probs.mean(axis=0)
+    aux = E * jnp.sum(f * p_mean)
+    return out, aux
+
+
+def moe_layer(params, x, cfg, rt) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux scalar)."""
+    B, S, D = x.shape
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    ep = rt.ep_size if rt is not None else 1
+
+    if ep > 1:
+        xspec = P(rt.data_axes if rt.data_axes else None, None, None)
+        wspec = P(rt.model_axis, None, None)
+
+        def body(x_loc, router, wi, wg, wo):
+            E_loc = wi.shape[0]
+            r = jax.lax.axis_index(rt.model_axis)
+            b, s, d = x_loc.shape
+            out, aux = _moe_local(
+                x_loc.reshape(b * s, d), router, wi, wg, wo,
+                first_expert=r * E_loc, E=E, E_pad=cfg.n_experts_padded,
+                top_k=k, cf=cf)
+            out = jax.lax.psum(out, rt.model_axis)
+            return out.reshape(b, s, d), aux
+
+        out, aux = jax.shard_map(
+            body, mesh=rt.mesh,
+            in_specs=(xspec, P(None, None), wspec, wspec, wspec),
+            out_specs=(xspec, P()),
+            check_vma=False,
+        )(x, params["router"], params["experts"]["wi"],
+          params["experts"]["wg"], params["experts"]["wo"])
+    else:
+        out, aux = _moe_local(
+            x.reshape(B * S, D), params["router"], params["experts"]["wi"],
+            params["experts"]["wg"], params["experts"]["wo"],
+            first_expert=0, E=E, E_pad=cfg.n_experts_padded, top_k=k, cf=cf)
+        out = out.reshape(B, S, D)
+
+    if "shared" in params:
+        sh = params["shared"]
+        s_out = jax.nn.silu(x @ sh["wg"]) * (x @ sh["wi"])
+        s_out = s_out @ sh["wo"]
+        if "shared_gate" in params:
+            gate = jax.nn.sigmoid(
+                (x.astype(jnp.float32) @ params["shared_gate"]))
+            s_out = s_out * gate.astype(s_out.dtype)
+        out = out + s_out
+    return out, aux

@@ -1,0 +1,256 @@
+"""Mamba-2 (SSD, state-space duality) mixer — pure jnp reference path.
+
+Follows the chunked SSD formulation of arXiv:2405.21060 (ssd_minimal), but
+implemented as a single ``lax.scan`` over chunks carrying the inter-chunk
+state, so prefill streams the final state out for decode continuation with
+O(chunk^2) working memory.
+
+Shapes:
+  x   [B, L, H, P]   (H = d_inner/headdim heads, P = headdim)
+  dt  [B, L, H]      (post softplus+bias)
+  A   [H]            (negative; A = -exp(A_log))
+  B,C [B, L, G, N]   (G ssm groups, N = d_state)
+
+The Pallas TPU kernel in ``repro.kernels.ssd_scan`` implements the same math.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def _segsum(a):
+    """a: [..., T] -> [..., T, T] with out[s,t] = sum_{k in (t, s]} a[k], -inf for t>s."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,L,H,P], final_state [B,H,P,N]).  f32 internally."""
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    assert H % G == 0
+    nc = L // chunk
+    rep = H // G
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    # keep inputs in their storage dtype; upcast per chunk inside the scan
+    xc, dtc, Bc, Cc = map(to_chunks, (x, dt, B, C))  # leading nc
+
+    if initial_state is None:
+        state0 = jnp.zeros((b, H, P, N), dtype=jnp.float32)
+    else:
+        state0 = initial_state.astype(jnp.float32)
+
+    A = A.astype(jnp.float32)
+
+    @jax.checkpoint
+    def step(state, inp):
+        xk, dtk, Bk, Ck = inp            # [b,chunk,...]
+        xk = xk.astype(jnp.float32).reshape(b, chunk, G, rep, P)
+        dtk = dtk.astype(jnp.float32)
+        Bk = Bk.astype(jnp.float32)      # [b,c,G,N]
+        Ck = Ck.astype(jnp.float32)
+        dA = dtk * A[None, None, :]      # [b,c,H]
+        cum = jnp.cumsum(dA, axis=1)     # [b,c,H]
+        # intra-chunk (diagonal block); group-factored to avoid repeating B/C
+        Lmat = jnp.exp(_segsum(dA.swapaxes(1, 2)))          # [b,H,c,c]
+        Lmat = Lmat.reshape(b, G, rep, chunk, chunk)
+        xdt = xk * dtk.reshape(b, chunk, G, rep)[..., None]  # [b,c,G,r,P]
+        scores = jnp.einsum("bsgn,btgn->bgst", Ck, Bk)      # [b,G,c,c]
+        y_diag = jnp.einsum("bgst,bgrst,btgrp->bsgrp", scores, Lmat, xdt)
+        # contribution of the carried state
+        decay_in = jnp.exp(cum).reshape(b, chunk, G, rep)
+        st = state.reshape(b, G, rep, P, N)
+        y_off = jnp.einsum("bsgn,bgrpn,bsgr->bsgrp", Ck, st, decay_in)
+        # chunk state + recurrence
+        decay_out = jnp.exp(cum[:, -1:, :] - cum).reshape(b, chunk, G, rep)
+        chunk_state = jnp.einsum("btgn,btgr,btgrp->bgrpn", Bk, decay_out, xdt)
+        new_state = (st * jnp.exp(cum[:, -1, :]).reshape(b, G, rep)[..., None, None]
+                     + chunk_state).reshape(b, H, P, N)
+        y = (y_diag + y_off).reshape(b, chunk, H, P)
+        return new_state, y
+
+    final_state, ys = jax.lax.scan(step, state0, (xc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(b, L, H, P)
+    return y, final_state
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token SSD update.
+
+    state [B,H,P,N], x [B,H,P], dt [B,H], B/C [B,G,N] -> (y [B,H,P], state').
+    """
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bm = jnp.repeat(B.astype(jnp.float32), rep, axis=1)  # [B,H,N]
+    Cm = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    dt = dt.astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])                        # [B,H]
+    xdt = x.astype(jnp.float32) * dt[..., None]          # [B,H,P]
+    state = state * dA[..., None, None] + jnp.einsum("bhn,bhp->bhpn", Bm, xdt)
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, state)
+    return y, state
+
+
+# --------------------------------------------------------------------------- #
+# causal depthwise conv1d (the mamba conv over [x, B, C] channels)
+# --------------------------------------------------------------------------- #
+def causal_conv1d(x, w, bias):
+    """x: [B, L, C]; w: [K, C]; causal depthwise conv + bias (no activation)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + bias[None, None, :]
+
+
+def conv_decode_step(conv_state, x_t, w, bias):
+    """conv_state: [B, K-1, C] (previous inputs), x_t: [B, C].
+
+    Returns (y_t [B,C], new_conv_state).
+    """
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", full, w) + bias[None, :]
+    return y, full[:, 1:, :]
+
+
+# --------------------------------------------------------------------------- #
+# full mamba-2 mixer
+# --------------------------------------------------------------------------- #
+def init_mamba_params(key, cfg, dtype):
+    import numpy as np
+    from repro.models.layers import dense_init
+    D = cfg.d_model
+    din = cfg.d_inner
+    H = cfg.ssm_nheads
+    d_in_proj = 2 * din + 2 * cfg.ssm_groups * cfg.ssm_state + H
+    ks = jax.random.split(key, 4)
+    dt_init = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[2], (H,), minval=np.log(1e-3), maxval=np.log(1e-1)))))
+    return {
+        "in_proj": dense_init(ks[0], (D, d_in_proj), D, dtype),
+        "out_proj": dense_init(ks[1], (din, D), din, dtype),
+        "conv_w": dense_init(ks[3], (cfg.ssm_conv, cfg.conv_dim), cfg.ssm_conv, jnp.float32),
+        "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),   # A = -exp(0) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "norm": {"scale": jnp.zeros((din,), jnp.float32)},
+    }
+
+
+def _split_zxbcdt(zxbcdt, cfg):
+    din = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:din + din + 2 * gn]
+    dt_raw = zxbcdt[..., din + din + 2 * gn:]
+    return z, xBC, dt_raw
+
+
+def mamba_mixer_fwd(params, x, cfg, *, chunk: int = 128,
+                    initial_state=None, return_state: bool = False,
+                    seq_lens=None):
+    """Train/prefill path.  x: [B, L, D] -> [B, L, D] (+ optional cache).
+
+    seq_lens [B]: true lengths for right-padded prefill — the conv decode
+    state must hold the last (K-1) *real* positions, not padding."""
+    b, L, D = x.shape
+    din, H, P = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    gn = cfg.ssm_groups * cfg.ssm_state
+
+    zxbcdt = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_zxbcdt(zxbcdt, cfg)
+    xBC = causal_conv1d(xBC.astype(jnp.float32), params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :din].reshape(b, L, H, P)
+    Bs = xBC[..., din:din + gn].reshape(b, L, cfg.ssm_groups, cfg.ssm_state)
+    Cs = xBC[..., din + gn:].reshape(b, L, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    if seq_lens is not None:
+        # right-padded prefill: dt=0 at padding => exp(dt*A)=1, the state
+        # passes through padded steps untouched
+        pos_mask = (jnp.arange(L)[None, :] < seq_lens[:, None])
+        dt = dt * pos_mask[..., None].astype(dt.dtype)
+    A = -jnp.exp(params["A_log"])
+
+    pad = (-L) % chunk
+    if pad:
+        padded = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        y, state = ssd_chunked(padded(xs), padded(dt), A, padded(Bs), padded(Cs),
+                               chunk=chunk, initial_state=initial_state)
+        y = y[:, :L]
+    else:
+        y, state = ssd_chunked(xs, dt, A, Bs, Cs, chunk=chunk,
+                               initial_state=initial_state)
+
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, L, din)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 params["norm"]["scale"])
+    out = y @ params["out_proj"]
+    if return_state:
+        # conv state = last (K-1) pre-activation conv inputs (of the REAL
+        # sequence when right-padded)
+        xBC_raw = _split_zxbcdt(zxbcdt, cfg)[1].astype(jnp.float32)
+        K = cfg.ssm_conv
+        if seq_lens is None:
+            seq_lens = jnp.full((b,), L, jnp.int32)
+        offs = jnp.arange(K - 1, dtype=jnp.int32)[None, :]
+        idx = seq_lens[:, None] - (K - 1) + offs          # [B, K-1]
+        valid = idx >= 0
+        idx = jnp.clip(idx, 0, L - 1)
+        conv_state = jnp.take_along_axis(
+            xBC_raw, idx[:, :, None], axis=1)
+        conv_state = jnp.where(valid[:, :, None], conv_state, 0.0)
+        return out, {"conv": conv_state, "ssm": state}
+    return out
+
+
+def mamba_mixer_decode(params, x_t, cfg, cache):
+    """Decode path.  x_t: [B, D] -> ([B, D], new cache)."""
+    b, D = x_t.shape
+    din, H, P = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    gn = cfg.ssm_groups * cfg.ssm_state
+
+    zxbcdt = x_t @ params["in_proj"]
+    z, xBC, dt_raw = _split_zxbcdt(zxbcdt, cfg)
+    conv_out, conv_state = conv_decode_step(
+        cache["conv"], xBC.astype(jnp.float32), params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(conv_out)
+    xs = xBC[..., :din].reshape(b, H, P)
+    Bs = xBC[..., din:din + gn].reshape(b, cfg.ssm_groups, cfg.ssm_state)
+    Cs = xBC[..., din + gn:].reshape(b, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, ssm_state = ssd_decode_step(cache["ssm"], xs, dt, A, Bs, Cs)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, din)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype),
+                 params["norm"]["scale"])
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.conv_dim), jnp.float32),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,84 @@
+"""AdamW with f32 master weights, global-norm clipping, warmup-cosine LR.
+
+No external optimizer dependency; state is a plain pytree so it shards and
+checkpoints like everything else.
+
+State = {"m": f32 like params, "v": f32 like params,
+         "master": f32 params copy, "count": i32 scalar}
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params):
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads), norm
+
+
+def apply(grads, state, params, *, lr, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          max_grad_norm: float = 1.0):
+    """One AdamW step.  Returns (new_params (model dtype), new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, master):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            step = step + weight_decay * master
+        return m, v, master - lr * step
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2); new_v.append(v2); new_w.append(w2)
+
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "master": jax.tree.unflatten(treedef, new_w),
+        "count": count,
+    }
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype),
+                              new_state["master"], params)
+    return new_params, new_state, {"grad_norm": gnorm}
+
+
+def warmup_cosine(step, *, base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(warmup, 1))
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

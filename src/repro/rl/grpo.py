@@ -1,0 +1,131 @@
+"""GRPO: group-relative policy optimization (DeepSeekMath, arXiv:2402.03300).
+
+The paper (RLBoost) keeps the synchronous on-policy GRPO algorithm untouched —
+so do we.  This module supplies:
+
+  * group-normalized advantages,
+  * the clipped-surrogate microbatch loss (+ optional k3 KL to a reference
+    policy, + MoE aux loss),
+  * ``train_step`` = loss -> grads -> AdamW update, the function the dry-run
+    lowers on the production mesh.
+
+Batch layout (one microbatch; what dynamic micro-batch pipelining assembles):
+  tokens            [B, S] int32   prompt + response, right-padded
+  response_mask     [B, S] f32     1.0 on *response* token positions
+  advantages        [B]    f32     group-normalized (already)
+  behavior_logprobs [B, S] f32     rollout-time logprobs (token t at slot t)
+  ref_logprobs      [B, S] f32     reference-policy logprobs (for KL; optional)
+
+Logprob alignment: token t is predicted from hidden t-1, so positions 1..S-1
+carry logprobs; masks are expected to be 0 at position 0.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import forward, token_logprobs
+from repro.optim import adamw
+
+
+def group_advantages(rewards: jnp.ndarray, group_size: int,
+                     eps: float = 1e-4) -> jnp.ndarray:
+    """rewards: [N] with N = n_prompts * group_size, grouped contiguously.
+
+    GRPO advantage: (r - mean_group) / (std_group + eps).
+    """
+    g = rewards.reshape(-1, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    return ((g - mean) / (std + eps)).reshape(-1)
+
+
+def policy_logprobs(params, cfg, rt, tokens, embeds=None):
+    """Per-position logprobs of the realized tokens under `params`.
+
+    Returns [B, S] with slot t = log p(tokens[t] | tokens[<t]); slot 0 is 0.
+    """
+    out = forward(params, cfg, rt, tokens=tokens, embeds=embeds, mode="train")
+    hidden = out["hidden"]
+    lp = token_logprobs(params, cfg, hidden[:, :-1], tokens[:, 1:], rt=rt)
+    lp = jnp.pad(lp, ((0, 0), (1, 0)))
+    return lp, out["aux"]
+
+
+def grpo_loss(params, cfg, rt, batch: Dict, *, clip_eps: float = 0.2,
+              kl_coef: float = 0.0, aux_coef: Optional[float] = None
+              ) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]
+    mask = batch["response_mask"].astype(jnp.float32)
+    adv = batch["advantages"].astype(jnp.float32)
+    beh = batch["behavior_logprobs"].astype(jnp.float32)
+
+    lp, aux = policy_logprobs(params, cfg, rt, tokens,
+                              embeds=batch.get("embeds"))
+    ratio = jnp.exp(lp - beh)
+    surr = jnp.minimum(ratio * adv[:, None],
+                       jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+                       * adv[:, None])
+    denom = jnp.maximum(mask.sum(), 1.0)
+    pg_loss = -(surr * mask).sum() / denom
+
+    metrics = {"pg_loss": pg_loss}
+    loss = pg_loss
+    if kl_coef and "ref_logprobs" in batch:
+        ref = batch["ref_logprobs"].astype(jnp.float32)
+        # k3 estimator: exp(ref-lp) - (ref-lp) - 1  (unbiased, positive)
+        d = ref - lp
+        kl = (jnp.exp(d) - d - 1.0)
+        kl_loss = (kl * mask).sum() / denom
+        loss = loss + kl_coef * kl_loss
+        metrics["kl"] = kl_loss
+    if aux_coef is None:
+        aux_coef = cfg.router_aux_coef if cfg.mlp_kind == "moe" else 0.0
+    if aux_coef:
+        loss = loss + aux_coef * aux / max(cfg.n_layers, 1)
+        metrics["moe_aux"] = aux
+    metrics["loss"] = loss
+    metrics["ratio_mean"] = (ratio * mask).sum() / denom
+    return loss, metrics
+
+
+def supervised_loss(params, cfg, rt, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Masked CE for encoder-only archs (hubert masked prediction)."""
+    out = forward(params, cfg, rt, tokens=batch.get("tokens"),
+                  embeds=batch.get("embeds"), mode="train")
+    lp = token_logprobs(params, cfg, out["hidden"], batch["labels"], rt=rt)
+    mask = batch["mask"].astype(jnp.float32)
+    loss = -(lp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss}
+
+
+def make_train_step(cfg, rt, *, lr: float = 1e-5, clip_eps: float = 0.2,
+                    kl_coef: float = 0.0, weight_decay: float = 0.0,
+                    loss_kind: str = "grpo"):
+    """Builds the jit-able train step: (state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": adamw state}
+    """
+    def loss_fn(params, batch):
+        if loss_kind == "supervised":
+            return supervised_loss(params, cfg, rt, batch)
+        return grpo_loss(params, cfg, rt, batch, clip_eps=clip_eps,
+                         kl_coef=kl_coef)
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], batch)
+        new_params, new_opt, om = adamw.apply(
+            grads, state["opt"], state["params"], lr=lr,
+            weight_decay=weight_decay)
+        metrics.update(om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(params):
+    return {"params": params, "opt": adamw.init(params)}

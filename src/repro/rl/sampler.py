@@ -1,0 +1,34 @@
+"""Migration-invariant token sampling.
+
+Every request carries a fixed RNG key; the key for the token at position p is
+``fold_in(request_key, p)``.  A migrated request therefore samples the exact
+same continuation on the destination instance as it would have on the source
+— RLBoost's token-level migration becomes *bit-exact* (property-tested in
+tests/test_properties.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def request_key(seed: int, request_id: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(seed), request_id)
+
+
+def sample_token(logits, req_keys, positions, temperature: float = 1.0):
+    """logits: [B, V]; req_keys: [B] uint32 pair keys; positions: [B].
+
+    temperature <= 0 means greedy.  Returns [B] int32.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(logit, key, pos):
+        k = jax.random.fold_in(jax.random.wrap_key_data(key), pos)
+        return jax.random.categorical(k, logit / temperature)
+
+    keys = req_keys  # [B, 2] raw key data
+    toks = jax.vmap(one)(logits, keys, positions)
+    return toks.astype(jnp.int32)

@@ -1,0 +1,202 @@
+"""Continuous-batching inference engine (the real-compute rollout backend).
+
+One engine = one rollout instance (or one local seeding engine on the
+training cluster).  Slot-based continuous batching over a fixed-capacity KV
+slab; per-request prefill (bucketed lengths) joins a running decode batch —
+the JAX analogue of vLLM/SGLang scheduling with static shapes.
+
+Token-level semantics needed by RLBoost:
+  * every generated token (and its behavior logprob) is emitted to the caller
+    as it is produced — the rollout manager collects at token granularity;
+  * ``add_request`` accepts prompt+partial tokens, so migrated requests
+    continue with a single prefill (paper §4.2);
+  * sampling keys are (request, position)-addressed => migration is bit-exact.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import EOS
+from repro.models import kv_cache as kvc
+from repro.models.transformer import (CPU_RT, decode_step, forward,
+                                      logits_from_hidden)
+from repro.rl.sampler import sample_token
+
+_JIT_CACHE: Dict = {}
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def _get_prefill_fn(cfg: ModelConfig, bucket: int, temperature: float):
+    key = ("prefill", cfg.name, cfg.d_model, bucket, temperature <= 0)
+    if key not in _JIT_CACHE:
+        def fn(params, cache, tokens, mask, slot, rkey):
+            row = kvc.slice_batch(cache, slot, 1)
+            out = forward(params, cfg, CPU_RT, tokens=tokens[None],
+                          seq_mask=mask[None], cache=row, mode="prefill")
+            cache = kvc.update_batch(cache, out["cache"], slot)
+            L = mask.astype(jnp.int32).sum()
+            hidden_last = jnp.take_along_axis(
+                out["hidden"], (L - 1)[None, None, None], axis=1)[0, 0]
+            logits = logits_from_hidden(params, cfg, hidden_last)
+            lse = jax.nn.logsumexp(
+                logits / (temperature if temperature > 0 else 1.0))
+            nxt = sample_token(logits[None], rkey[None], (L - 1)[None],
+                               temperature)[0]
+            lp = (logits[nxt] / (temperature if temperature > 0 else 1.0)) - lse
+            return cache, nxt, lp
+        _JIT_CACHE[key] = jax.jit(fn, donate_argnums=(1,))
+    return _JIT_CACHE[key]
+
+
+def _get_decode_fn(cfg: ModelConfig, temperature: float):
+    key = ("decode", cfg.name, cfg.d_model, temperature <= 0)
+    if key not in _JIT_CACHE:
+        def fn(params, cache, tokens, rkeys, active):
+            old_pos = cache["pos"]
+            out = decode_step(params, cfg, CPU_RT, tokens, cache)
+            logits = logits_from_hidden(params, cfg, out["hidden"][:, 0])
+            t = temperature if temperature > 0 else 1.0
+            nxt = sample_token(logits, rkeys, old_pos, temperature)
+            lse = jax.nn.logsumexp(logits / t, axis=-1)
+            lp = jnp.take_along_axis(
+                logits / t, nxt[:, None], axis=-1)[:, 0] - lse
+            cache = out["cache"]
+            cache["pos"] = jnp.where(active, cache["pos"], old_pos)
+            return cache, nxt, lp
+        _JIT_CACHE[key] = jax.jit(fn, donate_argnums=(1,))
+    return _JIT_CACHE[key]
+
+
+@dataclass
+class SlotState:
+    req_id: int
+    key_data: np.ndarray            # [2] uint32 raw key
+    tokens: List[int]               # prompt + generated (absolute history)
+    n_prompt: int
+    max_total: int
+    last_token: int
+
+
+@dataclass
+class StepEvent:
+    req_id: int
+    token: int
+    logprob: float
+    finished: bool
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 slab_len: int = 256, temperature: float = 1.0,
+                 weight_version: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.weight_version = weight_version
+        self.max_batch = max_batch
+        self.slab_len = slab_len
+        self.temperature = temperature
+        self.cache = kvc.init_cache(cfg, max_batch, slab_len, jnp.float32)
+        self.slots: List[Optional[SlotState]] = [None] * max_batch
+        self.tokens_buf = np.zeros((max_batch,), np.int32)
+        self.keys_buf = np.zeros((max_batch, 2), np.uint32)
+
+    # ------------------------------------------------------------------ #
+    def load_weights(self, params, version: int):
+        self.params = params
+        self.weight_version = version
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def free_slots(self) -> int:
+        return self.max_batch - self.n_active
+
+    # ------------------------------------------------------------------ #
+    def add_request(self, req_id: int, token_ids: List[int], key,
+                    max_total: int, n_prompt: int) -> Tuple[int, StepEvent]:
+        """Prefill prompt(+partial) into a free slot; returns (slot, first
+        emitted token event).  ``token_ids`` may include previously generated
+        tokens (migration continuation)."""
+        if self.free_slots() == 0:
+            raise RuntimeError("engine full: no free slots")
+        slot = next(i for i, s in enumerate(self.slots) if s is None)
+        L = len(token_ids)
+        assert L < self.slab_len, (L, self.slab_len)
+        bucket = min(_bucket(L), self.slab_len)
+        toks = np.zeros((bucket,), np.int32)
+        toks[:L] = token_ids
+        mask = np.zeros((bucket,), np.float32)
+        mask[:L] = 1.0
+        key_data = np.asarray(jax.random.key_data(key), np.uint32)
+        fn = _get_prefill_fn(self.cfg, bucket, self.temperature)
+        self.cache, nxt, lp = fn(self.params, self.cache, jnp.asarray(toks),
+                                 jnp.asarray(mask), slot,
+                                 jnp.asarray(key_data))
+        nxt = int(nxt)
+        st = SlotState(req_id=req_id, key_data=key_data,
+                       tokens=list(token_ids) + [nxt], n_prompt=n_prompt,
+                       max_total=max_total, last_token=nxt)
+        self.slots[slot] = st
+        self.tokens_buf[slot] = nxt
+        self.keys_buf[slot] = key_data
+        done = (nxt == EOS) or (len(st.tokens) >= st.max_total)
+        ev = StepEvent(req_id=req_id, token=nxt, logprob=float(lp),
+                       finished=done)
+        if done:
+            self.slots[slot] = None
+        return slot, ev
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> List[StepEvent]:
+        """One batched decode step over all active slots."""
+        active = np.array([s is not None for s in self.slots])
+        if not active.any():
+            return []
+        fn = _get_decode_fn(self.cfg, self.temperature)
+        self.cache, nxt, lps = fn(self.params, self.cache,
+                                  jnp.asarray(self.tokens_buf),
+                                  jnp.asarray(self.keys_buf),
+                                  jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        lps = np.asarray(lps)
+        events = []
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            t = int(nxt[i])
+            st.tokens.append(t)
+            st.last_token = t
+            self.tokens_buf[i] = t
+            done = (t == EOS) or (len(st.tokens) >= st.max_total)
+            events.append(StepEvent(req_id=st.req_id, token=t,
+                                    logprob=float(lps[i]), finished=done))
+            if done:
+                self.slots[i] = None
+        return events
+
+    # ------------------------------------------------------------------ #
+    def drop_request(self, req_id: int) -> Optional[List[int]]:
+        """Remove a request (migration away); returns its token history."""
+        for i, st in enumerate(self.slots):
+            if st is not None and st.req_id == req_id:
+                self.slots[i] = None
+                return list(st.tokens)
+        return None
+
+    def active_request_ids(self) -> List[int]:
+        return [s.req_id for s in self.slots if s is not None]

@@ -1,0 +1,131 @@
+"""Unit tests for Algorithm 1 (adaptive seeding) and Algorithm 2 (load
+balancer) — the paper's core scheduling logic."""
+
+from dataclasses import dataclass
+
+import pytest
+
+from repro.core.load_balancer import LoadBalancer, ProfileTable
+from repro.core.seeding import SeedingScheduler, StepStats
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 1
+# --------------------------------------------------------------------------- #
+def _stats(**kw):
+    base = dict(t_train_wait=0.0, t_remote_wait=0.0, t_train=100.0,
+                t_remote=100.0, n_prem_avg=4.0, n_prem_end=4)
+    base.update(kw)
+    return StepStats(**base)
+
+
+def test_tseed_increases_when_training_waits():
+    s = SeedingScheduler(n_resv=4, eta=4.0, t_init=10.0)
+    t0 = s.t_seed
+    s.update(_stats(t_train_wait=40.0))
+    assert s.t_seed == pytest.approx(t0 + 10.0)
+
+
+def test_tseed_decreases_when_remotes_wait():
+    s = SeedingScheduler(n_resv=4, eta=4.0, t_init=50.0)
+    s.update(_stats(t_remote_wait=40.0))
+    assert s.t_seed == pytest.approx(40.0)
+
+
+def test_nprem_bound_formula():
+    # line 10: N_prem = (t_remote * n_avg + T_seed * N_resv) / t_train
+    s = SeedingScheduler(n_resv=4, eta=1e9, t_init=20.0)
+    s.update(_stats(t_train=100.0, t_remote=200.0, n_prem_avg=5.0))
+    assert s.n_prem == pytest.approx((200.0 * 5.0 + 20.0 * 4) / 100.0)
+
+
+def test_scheduler_memory_restores_on_availability_change():
+    s = SeedingScheduler(n_resv=4, eta=4.0, t_init=10.0)
+    # converge at 6 instances (stable steps record memory)
+    for _ in range(5):
+        s.update(_stats(t_train_wait=8.0, n_prem_avg=6.0, n_prem_end=6))
+    t_at_6 = s.memory[6]
+    # drop to 2 instances for a while
+    for _ in range(3):
+        s.update(_stats(t_train_wait=80.0, n_prem_avg=2.0, n_prem_end=2))
+    # instances return to 6 -> memory warm-start (line 14)
+    s.update(_stats(n_prem_avg=4.0, n_prem_end=6))
+    assert s.t_seed == pytest.approx(t_at_6)
+
+
+def test_seeding_disabled_keeps_zero_window():
+    s = SeedingScheduler(n_resv=4, enabled=False)
+    s.update(_stats(t_train_wait=100.0))
+    assert s.t_seed == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 2
+# --------------------------------------------------------------------------- #
+@dataclass
+class FakeInst:
+    id: int
+    pending: int
+    executing: int
+    ok: bool = True
+
+    def n_pending(self):
+        return self.pending
+
+    def n_executing(self):
+        return self.executing
+
+    def accepts_work(self):
+        return self.ok
+
+
+def test_select_instance_jsq():
+    lb = LoadBalancer(theta=8)
+    insts = [FakeInst(0, 5, 10), FakeInst(1, 2, 30), FakeInst(2, 3, 1)]
+    assert lb.select_instance(insts).id == 1
+
+
+def test_select_instance_theta_hold():
+    lb = LoadBalancer(theta=4)
+    insts = [FakeInst(0, 4, 10), FakeInst(1, 9, 3)]
+    assert lb.select_instance(insts) is None  # all at/over Theta -> hold
+
+
+def test_select_skips_dead_and_stale():
+    lb = LoadBalancer(theta=8)
+    insts = [FakeInst(0, 0, 0, ok=False), FakeInst(1, 7, 3)]
+    assert lb.select_instance(insts).id == 1
+
+
+def test_rebalance_pending_to_drained():
+    lb = LoadBalancer()
+    insts = [FakeInst(0, 0, 4), FakeInst(1, 6, 8)]
+    orders = lb.rebalance(insts)
+    assert orders == [(1, 0, 1)]  # one request at a time (line 20)
+
+
+def test_rebalance_executing_clamped_to_plateau():
+    lb = LoadBalancer()
+    for b, tps in [(1, 100.0), (2, 200.0), (4, 400.0), (8, 420.0),
+                   (16, 430.0)]:
+        lb.profile.record(b, tps)
+    insts = [FakeInst(0, 0, 0), FakeInst(1, 0, 16)]
+    orders = lb.rebalance(insts)
+    assert orders, "idle instance should receive work"
+    src, dst, n = orders[0]
+    assert (src, dst) == (1, 0)
+    B = lb.profile.plateau()
+    assert n == 16 - B and B >= 4  # clamp to plateau batch (line 24)
+
+
+def test_no_executing_migration_without_profile():
+    lb = LoadBalancer()  # profile not ready in step 1 (paper note)
+    insts = [FakeInst(0, 0, 0), FakeInst(1, 0, 16)]
+    assert lb.rebalance(insts) == []
+
+
+def test_profile_plateau_monotone_input():
+    p = ProfileTable()
+    for b, t in [(1, 50.0), (2, 99.0), (4, 195.0), (8, 205.0)]:
+        p.record(b, t)
+    assert p.plateau() in (4, 8)

@@ -1,0 +1,106 @@
+"""Integration tests of the event-driven hybrid runtime (sim backend)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import trace as tr
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import model_perf_from_cfg
+
+CFG_M = get_config("qwen3-8b")
+PERF = model_perf_from_cfg(CFG_M)
+
+
+def _run(mode, n_inst, steps=3, **kw):
+    rc = RunnerConfig(mode=mode, n_prompts=32, group_size=4,
+                      mean_response=2000, max_response=8192, m_b=16,
+                      disagg_instances=n_inst, seed=2, **kw)
+    r = HybridRunner(rc, PERF, model_cfg=CFG_M)
+    r.load_trace(tr.constant_trace(n_inst))
+    return r, r.run(n_steps=steps)
+
+
+def test_rlboost_beats_colocated():
+    # small workload (tail-bound) — the paper-scale ratio check lives in
+    # benchmarks/bench_trace_throughput.py
+    _, colo = _run("colocated", 0)
+    _, boost = _run("rlboost", 6)
+    t_c = np.mean([m["throughput"] for m in colo[1:]])
+    t_b = np.mean([m["throughput"] for m in boost[1:]])
+    assert t_b > 1.15 * t_c, (t_b, t_c)
+
+
+def test_all_requests_complete_and_trained():
+    r, metrics = _run("rlboost", 4)
+    for m in metrics:
+        assert m["tokens"] > 0
+    assert all(x.done for x in r._step_requests)
+    assert r._trained == r._total
+
+
+def test_preemption_migrate_no_token_loss():
+    """Preempt mid-step: with migrate, completed work is preserved; the
+    step still finishes; migrations are recorded."""
+    rc = RunnerConfig(mode="rlboost", n_prompts=32, group_size=4,
+                      mean_response=2000, max_response=8192, m_b=16, seed=3)
+    r = HybridRunner(rc, PERF, model_cfg=CFG_M)
+    r.load_trace(tr.step_trace([(0.0, 4), (60.0, -1), (61.0, -1)]))
+    metrics = r.run(n_steps=2)
+    assert r.manager.n_preemptions >= 2
+    assert r.manager.n_migrations >= r.manager.n_preemptions
+    assert all(x.done for x in r._step_requests)
+
+
+def test_migrate_faster_than_recompute_under_preemption():
+    def run(fault_mode):
+        rc = RunnerConfig(mode="rlboost", n_prompts=32, group_size=4,
+                          mean_response=3000, max_response=8192, m_b=16,
+                          seed=4, fault_mode=fault_mode, t_seed_init=5.0)
+        r = HybridRunner(rc, PERF, model_cfg=CFG_M)
+        # preempt half the pool mid-rollout (early enough that rollout is
+        # still in flight on this fast 8B perf model)
+        r.load_trace(tr.step_trace([(0.0, 6), (25.0, -1), (26.0, -1),
+                                    (27.0, -1)]))
+        m = r.run(n_steps=1)
+        return m[0]["step_time"]
+
+    t_mig = run("migrate")
+    t_rec = run("recompute")
+    assert t_mig < t_rec, (t_mig, t_rec)
+
+
+def test_pull_uses_midstep_instances_sync_does_not():
+    def run(transfer_mode):
+        rc = RunnerConfig(mode="disagg", n_prompts=32, group_size=4,
+                          mean_response=3000, max_response=8192, m_b=16,
+                          seed=5, transfer_mode=transfer_mode,
+                          disagg_instances=8)
+        r = HybridRunner(rc, PERF, model_cfg=CFG_M)
+        # 2 instances at t=0; 6 more appear shortly after the step starts
+        r.load_trace(tr.step_trace([(0.0, 2), (30.0, 6)]))
+        m = r.run(n_steps=1)
+        return m[0]["step_time"]
+
+    t_pull = run("pull")
+    t_sync = run("sync")
+    assert t_pull < t_sync, (t_pull, t_sync)
+
+
+def test_nprem_bounds_allocation():
+    """Even with huge availability, RLBoost allocates at most N_prem."""
+    rc = RunnerConfig(mode="rlboost", n_prompts=32, group_size=4,
+                      mean_response=2000, max_response=8192, m_b=16, seed=6)
+    r = HybridRunner(rc, PERF, model_cfg=CFG_M)
+    r.load_trace(tr.constant_trace(64))
+    metrics = r.run(n_steps=3)
+    for m in metrics:
+        assert m["n_remote"] <= max(r.scheduler.max_instances(), 1) + 1
+
+
+def test_trace_synthesis_matches_stats():
+    for name, st in tr.SEGMENT_STATS.items():
+        ev = tr.synthesize_segment(name, seed=0)
+        avg = tr.average_capacity(ev)
+        assert abs(avg - st["avg"]) < 2.5, (name, avg)
+        assert sum(1 for e in ev if e.delta < 0) >= st["preempts"] - 2

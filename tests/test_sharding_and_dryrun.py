@@ -1,0 +1,100 @@
+"""Sharding-rule units + a real 512-device dry-run cell in a subprocess
+(the subprocess owns the XLA device-count flag; this process keeps 1 CPU)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.launch.hlo_analysis import analyze, parse_hlo
+from repro.launch.specs import abstract_params, abstract_state, input_specs
+from repro.configs.shapes import SHAPES
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+    axis_names = ("data", "model")
+
+
+def test_sanitize_spec_drops_nondivisible():
+    m = FakeMesh()
+    assert shd.sanitize_spec(P("model", None), (50280, 768), m) == P(None, None)
+    assert shd.sanitize_spec(P("model", None), (262144, 768), m) == P("model", None)
+    assert shd.sanitize_spec(P("data", "model", None), (3584, 28, 128), m) \
+        == P("data", None, None)
+    # tuple assignment degrades to its divisible prefix
+    assert shd.sanitize_spec(P(("pod", "data"),), (16,),
+                             type("M", (), {"shape": {"pod": 2, "data": 16,
+                                                      "model": 16},
+                                            "axis_names": ("pod", "data",
+                                                           "model")})()) \
+        == P("pod")
+
+
+def test_param_specs_cover_tree():
+    for arch in ("qwen2-7b", "qwen2-moe-a2.7b", "mamba2-130m"):
+        cfg = get_config(arch)
+        params = abstract_params(cfg)
+        specs = shd.param_specs(cfg, params)
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for p, s in zip(flat_p, flat_s):
+            assert len(s) <= len(p.shape), (p.shape, s)
+
+
+def test_input_specs_shapes():
+    cfg = get_config("qwen2-7b")
+    sp = input_specs(cfg, SHAPES["train_4k"])
+    assert sp["batch"]["tokens"].shape == (256, 4096)
+    sp = input_specs(cfg, SHAPES["decode_32k"])
+    assert sp["tokens"].shape == (128,)
+    # cache slabs sized seq_len + margin
+    k = jax.tree.leaves(sp["cache"])[1]
+    cfg2 = get_config("hubert-xlarge")
+    sp2 = input_specs(cfg2, SHAPES["train_4k"])
+    assert sp2["batch"]["embeds"].shape == (256, 4096, 1280)
+
+
+def test_hlo_analysis_loop_multiplier():
+    """Scanned matmul FLOPs must count trip_count times."""
+    import jax.numpy as jnp
+    W = jax.random.normal(jax.random.PRNGKey(0), (10, 128, 128))
+
+    def f(x):
+        return jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, W)[0]
+
+    comp = jax.jit(f).lower(jax.ShapeDtypeStruct((8, 128), jnp.float32)
+                            ).compile()
+    s = analyze(comp.as_text())
+    expect = 2 * 8 * 128 * 128 * 10
+    assert abs(s.dot_flops - expect) / expect < 0.05
+    assert 10 in [v for v in s.while_trips.values()]
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    """End-to-end: one real (arch x shape) cell lowered+compiled on the
+    512-placeholder-device production mesh, in a fresh subprocess."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "mamba2-130m", "--shape", "long_500k", "--outdir",
+         "/tmp/dryrun_test"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=480)
+    assert "[OK]" in out.stdout, out.stdout + out.stderr
+    rec = json.load(open("/tmp/dryrun_test/"
+                         "mamba2-130m__long_500k__pod1__fsdp_tp.json"))
+    assert rec["ok"] and rec["chips"] == 256
+    assert rec["roofline"]["bottleneck"] in ("compute_s", "memory_s",
+                                             "collective_s")
