@@ -1,0 +1,14 @@
+# Single CI entry point: tier-1 tests + a benchmark smoke run so perf
+# regressions in the paged serving path are caught per-PR.
+PY := PYTHONPATH=src python
+
+.PHONY: test bench-smoke ci
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -m benchmarks.run --quick --only kernels
+	$(PY) -m benchmarks.run --quick --only integrity
+
+ci: test bench-smoke

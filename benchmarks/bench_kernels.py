@@ -5,10 +5,12 @@ roofline bound alongside the achieved max-abs error."""
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
 from benchmarks.common import emit
@@ -30,21 +32,43 @@ def main(quick: bool = False):
     bound = max(flops / PEAK_FLOPS_BF16, byts / HBM_BW)
     emit("kernel/flash_attention/err", err, flops, bound * 1e6)
 
-    # decode attention (serving shape)
+    # decode attention (serving shape, ragged): modeled bytes follow the
+    # TRUE context lengths (what the seq-block-skipping kernel reads), not
+    # the full slab capacity
     T = 2048 if quick else 8192
     B2 = 8
     ks = jax.random.split(key, 4)
     q2 = jax.random.normal(ks[0], (B2, H, d), jnp.bfloat16)
     k2 = jax.random.normal(ks[1], (B2, K, T, d), jnp.bfloat16)
     v2 = jax.random.normal(ks[2], (B2, K, T, d), jnp.bfloat16)
-    lengths = jnp.full((B2,), T, jnp.int32)
+    lengths = jax.random.randint(ks[3], (B2,), T // 8, T + 1)
     o2 = decode_attention(q2, k2, v2, lengths, interpret=True)
     r2 = ref.decode_attention_ref(q2, k2, v2, lengths)
     err2 = float(jnp.abs(o2.astype(jnp.float32)
                          - r2.astype(jnp.float32)).max())
-    byts2 = (k2.size + v2.size) * 2
+    byts2 = 2 * int(jnp.sum(lengths)) * K * d * 2    # K+V, true lengths, bf16
     bound2 = byts2 / HBM_BW                          # memory-bound
     emit("kernel/decode_attention/err", err2, byts2, bound2 * 1e6)
+
+    # paged decode attention (block-table pools, ragged lengths)
+    ps = 64
+    nb = T // ps
+    P = 1 + B2 * nb
+    ks = jax.random.split(key, 5)
+    kp = jax.random.normal(ks[0], (P, ps, K, d), jnp.bfloat16)
+    vp = jax.random.normal(ks[1], (P, ps, K, d), jnp.bfloat16)
+    perm = np.random.RandomState(0).permutation(P - 1)[:B2 * nb] + 1
+    bt = jnp.asarray(perm.reshape(B2, nb), jnp.int32)
+    plen = jax.random.randint(ks[2], (B2,), 0, T + 1)
+    o3 = paged_decode_attention(q2, kp, vp, bt, plen, interpret=True)
+    r3 = ref.paged_decode_attention_ref(q2, kp, vp, bt, plen)
+    err3p = float(jnp.abs(o3.astype(jnp.float32)
+                          - r3.astype(jnp.float32)).max())
+    # pages actually touched (tail pages pl.when-skipped)
+    pages_read = int(jnp.sum(-(-plen // ps)))
+    byts3 = 2 * pages_read * ps * K * d * 2
+    emit("kernel/paged_decode_attention/err", err3p, byts3,
+         byts3 / HBM_BW * 1e6)
 
     # ssd scan (mamba2-130m geometry)
     b, L, Hh, G, P, N = 1, 512 if quick else 2048, 24, 1, 64, 128

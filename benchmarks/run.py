@@ -36,8 +36,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale runs (2h virtual traces)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (the default; explicit flag for "
+                         "make/CI entry points)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    assert not (args.full and args.quick), "--full and --quick conflict"
     quick = not args.full
     failures = 0
     for name, fn in BENCHES:

@@ -31,15 +31,16 @@ print(f"model: {cfg.name} ({sum(x.size for x in jax.tree.leaves(params)):,} para
 # --- 2. serve ---------------------------------------------------------------
 engine = InferenceEngine(cfg, params, max_batch=4, slab_len=64,
                          temperature=0.0)
-slot, ev = engine.add_request(0, tok.encode("12+34="), request_key(0, 0),
-                              max_total=20, n_prompt=7)
-toks = [ev.token]
-while not ev.finished and len(toks) < 10:
-    evs = engine.step()
+engine.add_request(0, tok.encode("12+34="), request_key(0, 0),
+                   max_total=20, n_prompt=7)
+toks = []
+while len(toks) < 10:
+    evs = engine.step()     # prefill happens inside the first step()
     if not evs:
         break
-    ev = evs[0]
-    toks.append(ev.token)
+    toks.append(evs[0].token)
+    if evs[0].finished:
+        break
 print("generated:", tok.decode(tok.strip_special(toks)) or "<raw>", toks)
 
 # --- 3. one GRPO train step --------------------------------------------------

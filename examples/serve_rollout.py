@@ -26,10 +26,10 @@ requests = {}
 for i in range(6):
     s = ds.sample(i)
     eng = min(engines, key=lambda e: e.n_active)   # JSQ
-    _, ev = eng.add_request(i, tok.encode(s.prompt), request_key(0, i),
-                            len(s.prompt) + 12, len(s.prompt))
+    eng.add_request(i, tok.encode(s.prompt), request_key(0, i),
+                    len(s.prompt) + 12, len(s.prompt))
     requests[i] = dict(prompt=s.prompt, answer=s.answer, engine=eng,
-                       tokens=[ev.token], done=ev.finished)
+                       tokens=[], done=False)
 
 round_i = 0
 while any(not r["done"] for r in requests.values()):
@@ -41,13 +41,11 @@ while any(not r["done"] for r in requests.values()):
             hist = engines[0].drop_request(rid)
             r = requests[rid]
             ctx = tok.encode(r["prompt"]) + r["tokens"]
-            _, ev = engines[1].add_request(
+            engines[1].add_request(
                 rid, ctx, request_key(0, rid),
                 len(tok.encode(r["prompt"])) + 12,
                 len(tok.encode(r["prompt"])))
             r["engine"] = engines[1]
-            r["tokens"].append(ev.token)
-            r["done"] = ev.finished
         engines[0] = None
     for eng in [e for e in set(r["engine"] for r in requests.values())
                 if e is not None]:

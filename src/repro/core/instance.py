@@ -62,9 +62,15 @@ class RolloutInstance:
 
     # ---------------- work intake ---------------- #
     def assign(self, req: Request):
-        req.status = Status.PENDING
-        req.instance_id = self.id
-        self.pending.append(req)
+        self.assign_many([req])
+
+    def assign_many(self, reqs: List[Request]):
+        """Assign a batch before kicking admission — GRPO siblings arriving
+        together can then be admitted as one prefix-sharing group."""
+        for req in reqs:
+            req.status = Status.PENDING
+            req.instance_id = self.id
+            self.pending.append(req)
         self._kick()
 
     def take_back(self, req_id: int) -> Optional[Request]:
@@ -93,23 +99,48 @@ class RolloutInstance:
         self.alive = False
 
     # ---------------- execution loop ---------------- #
+    def _room(self) -> int:
+        room = self.max_exec - len(self.executing)
+        if self.engine is not None:
+            room = min(room, self.engine.free_slots())
+        return room
+
     def _admit(self):
-        while self.pending and len(self.executing) < self.max_exec:
-            if self.engine is not None and self.engine.free_slots() == 0:
-                break
+        """Admit pending requests; GRPO siblings with the same fresh prompt
+        are admitted together so the engine prefills the prompt ONCE and
+        shares its pages (and the modeled prefill cost is deduplicated)."""
+        while self.pending and self._room() > 0:
             r = self.pending.pop(0)
-            r.status = Status.EXECUTING
-            self.executing[r.id] = r
+            group = [r]
+            sharable = (r.n_generated == 0
+                        and (self.engine is None
+                             or self.engine.supports_prefix_sharing))
+            if sharable:
+                sibs = [o for o in self.pending
+                        if o.group == r.group and o.n_generated == 0
+                        and o.prompt_ids == r.prompt_ids]
+                for o in sibs[:max(self._room() - 1, 0)]:
+                    self.pending.remove(o)
+                    group.append(o)
+            for x in group:
+                x.status = Status.EXECUTING
+                self.executing[x.id] = x
             # admission costs one prefill over prompt+partial (migration's
-            # "single prefill" — paper Fig 5)
-            self._pending_prefill_tokens += r.total_len
+            # "single prefill" — paper Fig 5); a shared group prompt is
+            # prefilled once, not len(group) times
+            self._pending_prefill_tokens += r.total_len + sum(
+                x.total_len - x.prompt_len for x in group[1:])
             if self.engine is not None:
-                import jax
                 from repro.rl.sampler import request_key
-                slot_ev = self.engine.add_request(
-                    r.id, r.context_ids(),
-                    request_key(r.seed, r.id), r.max_total, r.prompt_len)
-                self._emit(r, slot_ev[1])
+                if len(group) > 1:
+                    self.engine.add_group(
+                        [(x.id, request_key(x.seed, x.id), x.max_total)
+                         for x in group],
+                        list(r.prompt_ids or []), r.prompt_len)
+                else:
+                    self.engine.add_request(
+                        r.id, r.context_ids(),
+                        request_key(r.seed, r.id), r.max_total, r.prompt_len)
 
     def _kick(self):
         self._admit()
@@ -121,9 +152,9 @@ class RolloutInstance:
 
     def _step_time(self) -> float:
         n = max(len(self.executing), 1)
-        avg_ctx = (sum(r.total_len for r in self.executing.values()) / n
-                   if self.executing else 0.0)
-        t = self.perf.decode_step_time(self.kind, n, avg_ctx, self.cfg)
+        ctx_lens = [r.total_len for r in self.executing.values()] or [0]
+        t = self.perf.decode_step_time(self.kind, n, 0.0, self.cfg,
+                                       ctx_lens=ctx_lens)
         if self._pending_prefill_tokens:
             t += self.perf.prefill_time(self.kind, self._pending_prefill_tokens)
             self._pending_prefill_tokens = 0
@@ -152,11 +183,11 @@ class RolloutInstance:
         self.last_active_t = self.loop.now
 
         if self.engine is not None:
-            events = self.engine.step()
-            by_id = {e.req_id: e for e in events}
-            for r in list(self.executing.values()):
-                e = by_id.get(r.id)
-                if e is not None:
+            # events carry decode tokens for active slots plus first tokens
+            # of requests whose (batched) prefill completed this step
+            for e in self.engine.step():
+                r = self.executing.get(e.req_id)
+                if r is not None:
                     self._emit(r, e)
         else:
             for r in list(self.executing.values()):

@@ -60,13 +60,25 @@ class ModelPerf:
         n_attn = sum(m in ("global", "local", "hybrid") for m in mixers)
         return 2.0 * n_attn * cfg.n_kv_heads * cfg.head_dim * 2.0
 
+    def decode_kv_read_bytes(self, cfg, ctx_lens) -> float:
+        """HBM bytes the (ragged, paged) decode attention actually reads:
+        proportional to the TRUE context lengths, not slab capacity."""
+        return self.kv_bytes_per_token(cfg) * float(sum(ctx_lens))
+
     # ------------------------------------------------------------------ #
     def decode_step_time(self, kind: InstanceKind, batch: int,
-                         avg_ctx: float, cfg=None) -> float:
-        """One decode iteration for `batch` in-flight requests."""
+                         avg_ctx: float, cfg=None, ctx_lens=None) -> float:
+        """One decode iteration for `batch` in-flight requests.
+
+        With ``ctx_lens`` (paged/ragged accounting) KV traffic uses the
+        exact per-request lengths; otherwise batch * avg_ctx.
+        """
         flops = 2.0 * self.n_active * batch
         compute = flops / (kind.flops * DECODE_MFU)
-        kv = self.kv_bytes_per_token(cfg) * avg_ctx * batch
+        if ctx_lens is not None:
+            kv = self.decode_kv_read_bytes(cfg, ctx_lens)
+        else:
+            kv = self.kv_bytes_per_token(cfg) * avg_ctx * batch
         mem = (self.weight_bytes + kv) / kind.hbm
         return max(compute, mem)
 

@@ -178,14 +178,27 @@ class RolloutManager:
         self._dispatch()
 
     def _dispatch(self):
-        """SELECTINSTANCE with delayed dispatch for every held request."""
+        """SELECTINSTANCE with delayed dispatch for every held request.
+
+        GRPO-group aware: fresh siblings of the head request's group ride
+        along to the same instance so the engine can prefill their shared
+        prompt once (paged prefix sharing).  Requests carrying partial
+        tokens (migrations) dispatch individually as before.
+        """
         while self.queued:
             inst_view = self.lb.select_instance(
                 list(self.live_instances()))
             if inst_view is None:
                 return                           # all at Theta — hold
             r = self.queued.pop(0)
-            self.instances[inst_view.id].assign(r)
+            batch = [r]
+            if r.n_generated == 0:
+                sibs = [o for o in self.queued
+                        if o.group == r.group and o.n_generated == 0]
+                for o in sibs:
+                    self.queued.remove(o)
+                batch.extend(sibs)
+            self.instances[inst_view.id].assign_many(batch)
 
     def on_token(self, r: Request, inst: RolloutInstance):
         if self.on_token_cb is not None:

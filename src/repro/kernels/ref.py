@@ -53,6 +53,26 @@ def decode_attention_ref(q, k, v, lengths, *, window=0, cap=0.0):
     return jnp.einsum("bht,bhtd->bhd", p, vf).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                               cap=0.0):
+    """Oracle for the paged kernel: gather pages into a dense slab and run
+    ``decode_attention_ref``.
+
+    q: [B, H, d]; k_pages/v_pages: [P, ps, K, d]; block_tables: [B, nb];
+    lengths: [B].  Gathered slot i holds absolute position i (pages are
+    table-ordered).  Rows with length 0 return exactly zero (they have no
+    attendable context; the kernel's empty accumulator emits zeros).
+    """
+    k = k_pages[block_tables]                    # [B, nb, ps, K, d]
+    B, nb, ps, K, d = k.shape
+    T = nb * ps
+    k = k.reshape(B, T, K, d).transpose(0, 2, 1, 3)
+    v = v_pages[block_tables].reshape(B, T, K, d).transpose(0, 2, 1, 3)
+    out = decode_attention_ref(q, k, v, lengths, cap=cap)
+    return jnp.where((lengths > 0)[:, None, None], out,
+                     jnp.zeros_like(out))
+
+
 def ssd_scan_ref(x, dt, A, B, C, *, chunk=None):
     """Sequential SSD recurrence oracle (mathematically exact, O(L) steps).
 

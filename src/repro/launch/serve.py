@@ -42,14 +42,18 @@ def main():
     outs = {}
     for i, p in enumerate(args.prompts):
         ids = tok.encode(p)
-        _, ev = engine.add_request(i, ids, request_key(args.seed, i),
-                                   len(ids) + args.max_new, len(ids))
-        outs[i] = [ev.token]
-    done = {i for i in outs if len(outs[i]) >= args.max_new}
+        engine.add_request(i, ids, request_key(args.seed, i),
+                           len(ids) + args.max_new, len(ids))
+        outs[i] = []
+    # prompts batch-prefill inside the first step(); first tokens stream
+    # out of it together with subsequent decode rounds
+    done = set()
     while len(done) < len(args.prompts):
         evs = engine.step()
         if not evs:
-            break
+            if not engine.active_request_ids():
+                break
+            continue            # long prompts chunk-prefill across steps
         for ev in evs:
             outs[ev.req_id].append(ev.token)
             if ev.finished:

@@ -158,6 +158,76 @@ def attention_decode(q, k_cache, v_cache, kv_positions, q_positions, *,
 
 
 # --------------------------------------------------------------------------- #
+# paged decode / chunked prefill (block-table indexed KV pools)
+# --------------------------------------------------------------------------- #
+def gather_pages(pool, block_tables):
+    """pool: [P, ps, K, dh]; block_tables: [B, nb] -> [B, nb*ps, K, dh].
+
+    Gathered slot i holds absolute position i (pages are table-ordered);
+    padding table entries point at the garbage page and are masked by the
+    caller via position validity.
+    """
+    g = pool[block_tables]                       # [B, nb, ps, K, dh]
+    B, nb, ps = g.shape[:3]
+    return g.reshape(B, nb * ps, *g.shape[3:])
+
+
+def attention_paged_decode(q, k_pool, v_pool, block_tables, q_positions, *,
+                           cap: float) -> jax.Array:
+    """One-token decode against paged KV pools.
+
+    q: [B,1,H,dh] roped/scaled.  k_pool/v_pool: [P, ps, K, dh] (roped at
+    write).  block_tables: [B, nb].  q_positions: [B] absolute position of
+    the query token (== context length already written, minus one... the
+    current token's KV must already be written at q_positions).
+    """
+    k_ctx = gather_pages(k_pool, block_tables)
+    v_ctx = gather_pages(v_pool, block_tables)
+    B, T = k_ctx.shape[0], k_ctx.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    return attention_decode(q, k_ctx, v_ctx, kv_pos, q_positions,
+                            window=0, cap=cap)
+
+
+def attention_paged_prefill(q, k, v, k_pool, v_pool, block_tables, offsets,
+                            chunk_lens, *, cap: float) -> jax.Array:
+    """One prefill chunk against its own K/V plus the paged prefix.
+
+    q/k/v: [B, C, H|K, dh] roped (positions offsets+i) — q already scaled.
+    offsets: [B] tokens already in the pool for each row (prefix length).
+    chunk_lens: [B] valid tokens in this chunk (rows are right-padded).
+    The chunk's K/V is attended directly (it is written to pages after).
+    """
+    B, C = q.shape[0], q.shape[1]
+    K = k.shape[2]
+    qs = _split_heads(q, K)
+    k_pre = gather_pages(k_pool, block_tables)
+    v_pre = gather_pages(v_pool, block_tables)
+    T = k_pre.shape[1]
+    kk = jnp.concatenate([k_pre.astype(k.dtype), k], axis=1)   # [B, T+C, K, dh]
+    vv = jnp.concatenate([v_pre.astype(v.dtype), v], axis=1)
+    qpos = offsets[:, None] + jnp.arange(C, dtype=jnp.int32)[None]   # [B, C]
+    kvpos = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T)),
+         qpos], axis=1)                                              # [B, T+C]
+    valid = jnp.concatenate(
+        [jnp.arange(T, dtype=jnp.int32)[None] < offsets[:, None],
+         jnp.arange(C, dtype=jnp.int32)[None] < chunk_lens[:, None]], axis=1)
+    mask = valid[:, None, :] & (kvpos[:, None, :] <= qpos[:, :, None])
+    out = _attend(qs, kk, vv, mask[:, None, None], cap)   # [B,C,K,G,dh]
+    return _merge_heads(out)
+
+
+def paged_write(pool, vals, pages, offs):
+    """Scatter token K/V into pool pages.
+
+    pool: [P, ps, K, dh]; vals: [n, K, dh]; pages/offs: [n].  Duplicate
+    garbage-page destinations are fine (content is never read unmasked).
+    """
+    return pool.at[pages, offs].set(vals.astype(pool.dtype))
+
+
+# --------------------------------------------------------------------------- #
 # qk-norm
 # --------------------------------------------------------------------------- #
 def maybe_qk_norm(q, k, params, enabled: bool):

@@ -1,4 +1,4 @@
-"""Decode caches: global KV slabs, ring-buffer window caches, SSM states.
+"""Decode caches: paged KV pools, dense slabs, ring-buffer windows, SSM states.
 
 Cache pytree layout mirrors the parameter layout so it scans with the layers:
 
@@ -10,20 +10,128 @@ Cache pytree layout mirrors the parameter layout so it scans with the layers:
   }
 
 Layer caches by mixer kind:
-  global attn: {"k": [B, T_slab, K, dh], "v": ...}          (slot t = position t)
+  global attn (dense): {"k": [B, T_slab, K, dh], "v": ...}  (slot t = position t)
+  global attn (paged): {"k_pages": [P, page_size, K, dh], "v_pages": ...}
+                       shared pool; per-request block tables map position
+                       p -> (table[p // page_size], p % page_size)
   local attn:  {"k": [B, W, K, dh], "v": ...}               (ring: slot = p % W)
   mamba:       {"conv": [B, K-1, conv_dim], "ssm": [B, H, P, N]}
   hybrid:      {"k","v" (ring), "conv","ssm"}
+
+Paged pools are managed host-side by :class:`PagedKVAllocator` — a free-list
+page allocator with per-page reference counts so GRPO siblings share their
+prompt's pages copy-on-write (one prompt prefill per group).  Page 0 is the
+reserved garbage page: padded / inactive writes are routed there, so block
+tables can always be padded with 0.
 """
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.ssm import init_mamba_cache
+
+GARBAGE_PAGE = 0
+
+
+class OutOfPages(RuntimeError):
+    """Pool exhausted — callers grow the pool or reject the request."""
+
+
+class PagedKVAllocator:
+    """Host-side block/page-table allocator for the paged KV pools.
+
+    Pages hold ``page_size`` token positions.  A request's block table is a
+    python list of page ids; position p lives at (table[p // ps], p % ps).
+    Reference counts implement copy-on-write prompt sharing: ``fork`` increfs
+    every page of the source table, and ``writable_page`` copies a page out
+    (returning the (src, dst) pair for the device-side copy) the first time a
+    sharer writes into it.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2 and page_size >= 1
+        self.page_size = page_size
+        self.num_pages = num_pages              # includes the garbage page 0
+        self.ref = np.zeros((num_pages,), np.int32)
+        # LIFO free list, page 0 reserved as garbage
+        self._free = list(range(num_pages - 1, 0, -1))
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity_tokens(self) -> int:
+        return (self.num_pages - 1) * self.page_size
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    # ------------------------------------------------------------------ #
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self.ref[pages] = 1
+        return pages
+
+    def alloc_table(self, n_tokens: int) -> List[int]:
+        """Fresh block table covering n_tokens positions."""
+        return self.alloc(self.pages_for(n_tokens))
+
+    def free_page(self, page: int):
+        assert page != GARBAGE_PAGE and self.ref[page] > 0, page
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            self._free.append(page)
+
+    def free_table(self, table: List[int]):
+        for p in table:
+            self.free_page(p)
+        table.clear()
+
+    # ------------------------------------------------------------------ #
+    def fork(self, table: List[int]) -> List[int]:
+        """Share every page of ``table`` with a new table (COW)."""
+        for p in table:
+            self.ref[p] += 1
+        return list(table)
+
+    def ensure_capacity(self, table: List[int], n_tokens: int):
+        """Append fresh pages until the table covers n_tokens positions."""
+        need = self.pages_for(n_tokens) - len(table)
+        if need > 0:
+            table.extend(self.alloc(need))
+
+    def writable_page(self, table: List[int], pos: int
+                      ) -> Tuple[int, Optional[Tuple[int, int]]]:
+        """Page for writing position ``pos``; COW-copies a shared page.
+
+        Returns (page, copy) where copy is a (src, dst) pair the caller must
+        apply to the device pools before writing, or None.
+        """
+        idx = pos // self.page_size
+        page = table[idx]
+        if self.ref[page] > 1:                   # shared — copy out
+            new = self.alloc(1)[0]
+            self.ref[page] -= 1
+            table[idx] = new
+            return new, (page, new)
+        return page, None
+
+    # ------------------------------------------------------------------ #
+    def grow(self, new_num_pages: int):
+        assert new_num_pages > self.num_pages
+        self._free.extend(range(new_num_pages - 1, self.num_pages - 1, -1))
+        self.ref = np.concatenate(
+            [self.ref, np.zeros((new_num_pages - self.num_pages,), np.int32)])
+        self.num_pages = new_num_pages
 
 
 def attn_cache_shape(cfg, mixer: str, batch: int, slab_len: int):
@@ -66,10 +174,109 @@ def init_cache(cfg, batch: int, slab_len: int, dtype=jnp.bfloat16):
     return cache
 
 
+def init_paged_layer_cache(cfg, mixer: str, batch: int, num_pages: int,
+                           page_size: int, ring_len: int, dtype):
+    """Like init_layer_cache but global-attn KV lives in a shared page pool."""
+    c: Dict = {}
+    if mixer == "global":
+        shape = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        c["k_pages"] = jnp.zeros(shape, dtype)
+        c["v_pages"] = jnp.zeros(shape, dtype)
+    elif mixer in ("local", "hybrid"):
+        shape = attn_cache_shape(cfg, mixer, batch, ring_len)
+        c["k"] = jnp.zeros(shape, dtype)
+        c["v"] = jnp.zeros(shape, dtype)
+    if mixer in ("mamba", "hybrid"):
+        c.update(init_mamba_cache(cfg, batch))
+    return c
+
+
+def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
+                     ring_len: int = 128, dtype=jnp.float32):
+    """Decode cache with paged global-attn pools + per-slot state leaves.
+
+    ``batch`` sizes the per-slot leaves (decode concurrency); the pool is
+    shared by all slots and bounded by ``num_pages`` (page 0 = garbage).
+    """
+    mixers = cfg.layer_mixers()
+    cache = {"pos": jnp.zeros((batch,), jnp.int32),
+             "prefix": {}, "groups": {}, "suffix": {}}
+    mk = lambda m: init_paged_layer_cache(cfg, m, batch, num_pages, page_size,
+                                          ring_len, dtype)
+    for i in range(cfg.first_k_dense):
+        cache["prefix"][str(i)] = mk(mixers[i])
+    G = cfg.n_groups
+    for j, mixer in enumerate(cfg.pattern):
+        one = mk(mixer)
+        cache["groups"][f"sub{j}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (G,) + t.shape).copy()
+            if G else t[None][:0], one)
+    for i, mixer in enumerate(cfg.suffix_pattern):
+        cache["suffix"][str(i)] = mk(mixer)
+    return cache
+
+
 def _batch_axis(path) -> int:
     """Batch dim index for a cache leaf (group-stacked leaves lead with G)."""
     pstr = jax.tree_util.keystr(path)
     return 1 if "'groups'" in pstr else 0
+
+
+def _is_pool(path) -> bool:
+    pstr = jax.tree_util.keystr(path)
+    return "k_pages" in pstr or "v_pages" in pstr
+
+
+def gather_rows(cache, idx):
+    """Per-slot leaves: rows at ``idx`` [n] (traced ok); pool leaves pass
+    through whole (they are shared, not per-slot).  OOB indices clamp."""
+    def f(p, c):
+        if _is_pool(p):
+            return c
+        return jnp.take(c, idx, axis=_batch_axis(p), mode="clip")
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def scatter_rows(cache, rows, idx):
+    """Write gathered rows back at slot positions ``idx``; pool leaves in
+    ``rows`` replace the old pools wholesale.  OOB indices are dropped, so
+    padding rows can use idx == batch."""
+    def f(p, c, r):
+        if _is_pool(p):
+            return r
+        ax = _batch_axis(p)
+        r = r.astype(c.dtype)
+        if ax == 0:
+            return c.at[idx].set(r, mode="drop")
+        return c.at[:, idx].set(r, mode="drop")
+    return jax.tree_util.tree_map_with_path(f, cache, rows)
+
+
+def copy_pool_pages(cache, src, dst):
+    """pool[dst] = pool[src] on every pool leaf (COW page materialisation).
+
+    src/dst: [m] int32; duplicate or garbage entries are harmless (dst may
+    repeat GARBAGE_PAGE for padding).
+    """
+    def f(p, c):
+        if not _is_pool(p):
+            return c
+        if _batch_axis(p) == 1:                 # group-stacked pool [G, P, ...]
+            return c.at[:, dst].set(c[:, src])
+        return c.at[dst].set(c[src])
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def grow_pool(cache, new_num_pages: int):
+    """Extend every pool leaf to ``new_num_pages`` pages (zero-filled tail)."""
+    def f(p, c):
+        if not _is_pool(p):
+            return c
+        ax = 1 if _batch_axis(p) == 1 else 0
+        pad = [(0, 0)] * c.ndim
+        pad[ax] = (0, new_num_pages - c.shape[ax])
+        return jnp.pad(c, pad)
+    return jax.tree_util.tree_map_with_path(f, cache)
 
 
 def slice_batch(cache, idx, size: int = 1):

@@ -175,7 +175,7 @@ def init_params(cfg: ModelConfig, key) -> Dict:
 # layer application
 # --------------------------------------------------------------------------- #
 def _attn_apply(p, h, cfg: ModelConfig, rt: ModelRuntime, mixer: str,
-                mode: str, cache, positions, lens=None):
+                mode: str, cache, positions, lens=None, paged=None):
     B, S, D = h.shape
     H, K, dh = cfg.n_heads_eff, cfg.n_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,dhx->bshx", h, p["wq"])
@@ -197,7 +197,8 @@ def _attn_apply(p, h, cfg: ModelConfig, rt: ModelRuntime, mixer: str,
     window = cfg.window if local else 0
 
     # Pallas fast path (TPU target; interpret mode off-TPU)
-    if (rt.use_pallas and mode != "decode" and S % 128 == 0):
+    if (rt.use_pallas and mode != "decode" and S % 128 == 0
+            and paged is None):
         from repro.kernels import ops as kops
         out = kops.attention_bshd(q, k, v, causal=cfg.causal, window=window,
                                   cap=cfg.attn_softcap, use_pallas=True)
@@ -216,6 +217,43 @@ def _attn_apply(p, h, cfg: ModelConfig, rt: ModelRuntime, mixer: str,
     q = q * (dh ** -0.5)
 
     new_cache: Dict = {}
+    # ---- paged path: global-attn KV lives in a shared page pool ---- #
+    if paged is not None and mixer == "global":
+        from repro.models.attention import (attention_paged_decode,
+                                            attention_paged_prefill,
+                                            paged_write)
+        bt = paged["block_tables"]                       # [B, nb]
+        ps = cache["k_pages"].shape[1]
+        nb = bt.shape[1]
+        if mode == "decode":
+            pos = positions[:, 0]                        # [B]
+            page = jnp.take_along_axis(
+                bt, jnp.minimum(pos // ps, nb - 1)[:, None], axis=1)[:, 0]
+            ck = paged_write(cache["k_pages"], k[:, 0], page, pos % ps)
+            cv = paged_write(cache["v_pages"], v[:, 0], page, pos % ps)
+            out = attention_paged_decode(q, ck, cv, bt, pos,
+                                         cap=cfg.attn_softcap)
+        else:                                            # prefill chunk
+            offs0 = paged["q_offsets"]                   # [B]
+            C = k.shape[1]
+            if lens is None:
+                lens = jnp.full((B,), C, jnp.int32)
+            out = attention_paged_prefill(
+                q, k, v, cache["k_pages"], cache["v_pages"], bt, offs0, lens,
+                cap=cfg.attn_softcap)
+            pos_grid = offs0[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+            validc = jnp.arange(C, dtype=jnp.int32)[None] < lens[:, None]
+            pages = jnp.take_along_axis(
+                bt, jnp.minimum(pos_grid // ps, nb - 1), axis=1)
+            pages = jnp.where(validc, pages, kvc.GARBAGE_PAGE)
+            n = B * C
+            ck = paged_write(cache["k_pages"], k.reshape(n, K, dh),
+                             pages.reshape(n), (pos_grid % ps).reshape(n))
+            cv = paged_write(cache["v_pages"], v.reshape(n, K, dh),
+                             pages.reshape(n), (pos_grid % ps).reshape(n))
+        out = jnp.einsum("bshx,hxd->bsd", out, p["wo"])
+        return out, {"k_pages": ck, "v_pages": cv}
+
     if mode == "decode":
         pos = positions[:, 0]                      # [B]
         Wr = cache["k"].shape[1]
@@ -244,7 +282,8 @@ def _attn_apply(p, h, cfg: ModelConfig, rt: ModelRuntime, mixer: str,
 
 
 def _apply_layer(p, x, *, cfg: ModelConfig, rt: ModelRuntime, mixer: str,
-                 mlp_kind: str, mode: str, cache, positions, seq_mask):
+                 mlp_kind: str, mode: str, cache, positions, seq_mask,
+                 paged=None):
     new_cache: Dict = {}
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["ln1"]["scale"])
@@ -254,7 +293,8 @@ def _apply_layer(p, x, *, cfg: ModelConfig, rt: ModelRuntime, mixer: str,
         lens = (seq_mask.astype(jnp.int32).sum(-1)
                 if (seq_mask is not None and mode == "prefill") else None)
         attn_out, kv_new = _attn_apply(p["attn"], h, cfg, rt, mixer, mode,
-                                       cache, positions, lens=lens)
+                                       cache, positions, lens=lens,
+                                       paged=paged)
         new_cache.update(kv_new)
     if mixer in ("mamba", "hybrid"):
         if mode == "decode":
@@ -306,12 +346,18 @@ def _apply_layer(p, x, *, cfg: ModelConfig, rt: ModelRuntime, mixer: str,
 # full model
 # --------------------------------------------------------------------------- #
 def forward(params, cfg: ModelConfig, rt: ModelRuntime, *, tokens=None,
-            embeds=None, seq_mask=None, cache=None, mode: str = "train"):
+            embeds=None, seq_mask=None, cache=None, mode: str = "train",
+            paged=None):
     """Returns dict(hidden=[B,S,D] f-compute-dtype, cache=..., aux=scalar).
 
     train:   tokens [B,S] (or embeds [B,S,D]); cache must be None.
     prefill: like train but ``cache`` is a fresh cache to fill.
     decode:  tokens [B] int32; cache required; positions = cache["pos"].
+
+    ``paged`` routes global-attn KV through shared page pools instead of
+    per-slot slabs: {"block_tables": [B, nb] int32} plus, for prefill
+    chunks, {"q_offsets": [B] int32} — the number of tokens each row already
+    has in the pool (the chunk attends to that prefix and is written after).
     """
     assert mode in ("train", "prefill", "decode")
     if mode == "decode":
@@ -327,6 +373,8 @@ def forward(params, cfg: ModelConfig, rt: ModelRuntime, *, tokens=None,
                              cfg.d_model)
         B, S = x.shape[:2]
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        if paged is not None and "q_offsets" in paged:
+            positions = paged["q_offsets"][:, None] + positions
     x = rt.shard_act(x)
 
     mixers = cfg.layer_mixers()
@@ -339,7 +387,7 @@ def forward(params, cfg: ModelConfig, rt: ModelRuntime, *, tokens=None,
         x, nc, aux = _apply_layer(
             params["prefix"][str(i)], x, cfg=cfg, rt=rt, mixer=mixers[i],
             mlp_kind="dense", mode=mode, cache=lc, positions=positions,
-            seq_mask=seq_mask)
+            seq_mask=seq_mask, paged=paged)
         new_cache["prefix"][str(i)] = nc
         aux_total += aux
 
@@ -355,7 +403,7 @@ def forward(params, cfg: ModelConfig, rt: ModelRuntime, *, tokens=None,
             xx, nc, a = _apply_layer(
                 gp[f"sub{j}"], xx, cfg=cfg, rt=rt, mixer=mixer,
                 mlp_kind=cfg.mlp_kind, mode=mode, cache=lc,
-                positions=positions, seq_mask=seq_mask)
+                positions=positions, seq_mask=seq_mask, paged=paged)
             ncs[f"sub{j}"] = nc
             aux_acc = aux_acc + a
         return (xx, aux_acc), ncs
@@ -376,7 +424,7 @@ def forward(params, cfg: ModelConfig, rt: ModelRuntime, *, tokens=None,
         x, nc, aux = _apply_layer(
             params["suffix"][str(i)], x, cfg=cfg, rt=rt, mixer=mixer,
             mlp_kind=cfg.mlp_kind, mode=mode, cache=lc, positions=positions,
-            seq_mask=seq_mask)
+            seq_mask=seq_mask, paged=paged)
         new_cache["suffix"][str(i)] = nc
         aux_total += aux
 
@@ -393,6 +441,8 @@ def forward(params, cfg: ModelConfig, rt: ModelRuntime, *, tokens=None,
             new_cache["pos"] = seq_mask.astype(jnp.int32).sum(axis=-1)
         else:
             new_cache["pos"] = jnp.full((x.shape[0],), S, jnp.int32)
+        if paged is not None and "q_offsets" in paged:
+            new_cache["pos"] = paged["q_offsets"] + new_cache["pos"]
     return {"hidden": x, "cache": new_cache, "aux": aux_total}
 
 
@@ -464,5 +514,6 @@ def prefill(params, cfg, rt, tokens=None, embeds=None, seq_mask=None,
                    seq_mask=seq_mask, cache=cache, mode="prefill")
 
 
-def decode_step(params, cfg, rt, tokens, cache):
-    return forward(params, cfg, rt, tokens=tokens, cache=cache, mode="decode")
+def decode_step(params, cfg, rt, tokens, cache, paged=None):
+    return forward(params, cfg, rt, tokens=tokens, cache=cache, mode="decode",
+                   paged=paged)

@@ -35,12 +35,15 @@ class RealRLHarness:
     def __init__(self, model_cfg: ModelConfig, runner_cfg: RunnerConfig, *,
                  lr: float = 3e-4, temperature: float = 1.0,
                  max_new: int = 12, clip_eps: float = 0.2,
-                 dataset: Optional[MathTaskDataset] = None):
+                 dataset: Optional[MathTaskDataset] = None,
+                 page_size: int = 16, prefill_chunk: int = 256):
         self.cfg = model_cfg
         self.rc = runner_cfg
         self.max_new = max_new
         self.temperature = temperature
         self.lr = lr
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
         self.dataset = dataset or MathTaskDataset(seed=runner_cfg.seed,
                                                   digits=1)
         self.params = init_params(model_cfg, jax.random.PRNGKey(runner_cfg.seed))
@@ -75,8 +78,12 @@ class RealRLHarness:
 
     # ------------------------------------------------------------------ #
     def _engine_factory(self):
+        # paged engine: GRPO siblings dispatched together share their prompt
+        # pages (1 prefill per group); responses may outgrow slab_len
         return InferenceEngine(self.cfg, self.params, max_batch=8,
-                               slab_len=128, temperature=self.temperature)
+                               slab_len=128, temperature=self.temperature,
+                               page_size=self.page_size,
+                               prefill_chunk=self.prefill_chunk)
 
     def _request_factory(self, rid: int, group: int) -> Request:
         sample = self.dataset.sample(group)

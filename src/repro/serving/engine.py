@@ -1,9 +1,21 @@
-"""Continuous-batching inference engine (the real-compute rollout backend).
+"""Continuous-batching inference engine over a paged KV cache (the
+real-compute rollout backend).
 
 One engine = one rollout instance (or one local seeding engine on the
-training cluster).  Slot-based continuous batching over a fixed-capacity KV
-slab; per-request prefill (bucketed lengths) joins a running decode batch —
-the JAX analogue of vLLM/SGLang scheduling with static shapes.
+training cluster).  Global-attention KV lives in a shared page pool with
+per-request block tables (``repro.models.kv_cache.PagedKVAllocator``);
+per-slot state (ring buffers, SSM states, sampling buffers) is bounded by
+``max_batch`` decode slots.  The scheduler:
+
+  * batches prefill across waiting requests in fixed token-budget chunks,
+    interleaved with decode steps (one chunk per request per ``step()``;
+    long prompts on all-global models are split across steps);
+  * shares GRPO group prompts: ``add_group`` prefill's the common prompt
+    ONCE, ref-counts its pages, and forks the block table copy-on-write to
+    every sibling — group rollout does 1 prompt prefill instead of G;
+  * admits by capacity (``AdmissionError``), not by a slab-length assert:
+    responses may grow past any fixed slab because the pool allocates (and,
+    if needed, grows) pages on demand.
 
 Token-level semantics needed by RLBoost:
   * every generated token (and its behavior logprob) is emitted to the caller
@@ -15,8 +27,7 @@ Token-level semantics needed by RLBoost:
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -26,11 +37,15 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import EOS
 from repro.models import kv_cache as kvc
-from repro.models.transformer import (CPU_RT, decode_step, forward,
-                                      logits_from_hidden)
+from repro.models.kv_cache import GARBAGE_PAGE, OutOfPages, PagedKVAllocator
+from repro.models.transformer import (CPU_RT, forward, logits_from_hidden)
 from repro.rl.sampler import sample_token
 
 _JIT_CACHE: Dict = {}
+
+
+class AdmissionError(RuntimeError):
+    """Request rejected at admission (engine full / over capacity)."""
 
 
 def _bucket(n: int, minimum: int = 16) -> int:
@@ -40,34 +55,37 @@ def _bucket(n: int, minimum: int = 16) -> int:
     return b
 
 
-def _get_prefill_fn(cfg: ModelConfig, bucket: int, temperature: float):
-    key = ("prefill", cfg.name, cfg.d_model, bucket, temperature <= 0)
+# --------------------------------------------------------------------------- #
+# jitted stages (cache keyed on the temperature VALUE — two engines with
+# different positive temperatures must not share compiled closures)
+# --------------------------------------------------------------------------- #
+def _get_prefill_fn(cfg: ModelConfig, n: int, C: int, nb: int):
+    """Batched chunk prefill: n rows of C tokens against paged prefixes."""
+    key = ("prefill", cfg.name, cfg.d_model, n, C, nb)
     if key not in _JIT_CACHE:
-        def fn(params, cache, tokens, mask, slot, rkey):
-            row = kvc.slice_batch(cache, slot, 1)
-            out = forward(params, cfg, CPU_RT, tokens=tokens[None],
-                          seq_mask=mask[None], cache=row, mode="prefill")
-            cache = kvc.update_batch(cache, out["cache"], slot)
-            L = mask.astype(jnp.int32).sum()
+        def fn(params, cache, slot_idx, tokens, mask, offsets, bt):
+            rows = kvc.gather_rows(cache, slot_idx)
+            out = forward(params, cfg, CPU_RT, tokens=tokens, seq_mask=mask,
+                          cache=rows, mode="prefill",
+                          paged={"block_tables": bt, "q_offsets": offsets})
+            cache = kvc.scatter_rows(cache, out["cache"], slot_idx)
+            lens = mask.astype(jnp.int32).sum(-1)
+            last = jnp.clip(lens - 1, 0)
             hidden_last = jnp.take_along_axis(
-                out["hidden"], (L - 1)[None, None, None], axis=1)[0, 0]
-            logits = logits_from_hidden(params, cfg, hidden_last)
-            lse = jax.nn.logsumexp(
-                logits / (temperature if temperature > 0 else 1.0))
-            nxt = sample_token(logits[None], rkey[None], (L - 1)[None],
-                               temperature)[0]
-            lp = (logits[nxt] / (temperature if temperature > 0 else 1.0)) - lse
-            return cache, nxt, lp
+                out["hidden"], last[:, None, None], axis=1)[:, 0]
+            logits = logits_from_hidden(params, cfg, hidden_last)  # [n, V]
+            return cache, logits
         _JIT_CACHE[key] = jax.jit(fn, donate_argnums=(1,))
     return _JIT_CACHE[key]
 
 
-def _get_decode_fn(cfg: ModelConfig, temperature: float):
-    key = ("decode", cfg.name, cfg.d_model, temperature <= 0)
+def _get_decode_fn(cfg: ModelConfig, nb: int, temperature: float):
+    key = ("decode", cfg.name, cfg.d_model, nb, temperature)
     if key not in _JIT_CACHE:
-        def fn(params, cache, tokens, rkeys, active):
+        def fn(params, cache, tokens, rkeys, active, bt):
             old_pos = cache["pos"]
-            out = decode_step(params, cfg, CPU_RT, tokens, cache)
+            out = forward(params, cfg, CPU_RT, tokens=tokens, cache=cache,
+                          mode="decode", paged={"block_tables": bt})
             logits = logits_from_hidden(params, cfg, out["hidden"][:, 0])
             t = temperature if temperature > 0 else 1.0
             nxt = sample_token(logits, rkeys, old_pos, temperature)
@@ -81,6 +99,31 @@ def _get_decode_fn(cfg: ModelConfig, temperature: float):
     return _JIT_CACHE[key]
 
 
+def _get_sample_fn(temperature: float):
+    """Sample one token from a single logits row at an absolute position."""
+    key = ("sample", temperature)
+    if key not in _JIT_CACHE:
+        def fn(logits, key_data, pos):
+            t = temperature if temperature > 0 else 1.0
+            lse = jax.nn.logsumexp(logits / t)
+            nxt = sample_token(logits[None], key_data[None], pos[None],
+                               temperature)[0]
+            lp = (logits[nxt] / t) - lse
+            return nxt, lp
+        _JIT_CACHE[key] = jax.jit(fn)
+    return _JIT_CACHE[key]
+
+
+def _get_copy_fn(cfg: ModelConfig, m: int):
+    key = ("copy", cfg.name, cfg.d_model, m)
+    if key not in _JIT_CACHE:
+        def fn(cache, src, dst):
+            return kvc.copy_pool_pages(cache, src, dst)
+        _JIT_CACHE[key] = jax.jit(fn, donate_argnums=(0,))
+    return _JIT_CACHE[key]
+
+
+# --------------------------------------------------------------------------- #
 @dataclass
 class SlotState:
     req_id: int
@@ -89,6 +132,19 @@ class SlotState:
     n_prompt: int
     max_total: int
     last_token: int
+    table: List[int]                # block table (page ids)
+    ctx_len: int                    # tokens whose KV is in the pool
+
+
+@dataclass
+class _WaitRow:
+    """One prefill context: a request's prompt+partial, or a GRPO group's
+    shared prompt.  ``members`` are the requests that will consume it."""
+    token_ids: List[int]
+    table: List[int]
+    members: List[Tuple[int, np.ndarray, int, int, int]]
+    # (req_id, key_data, max_total, n_prompt, slot)
+    done: int = 0                   # tokens already prefilled (chunking)
 
 
 @dataclass
@@ -102,17 +158,39 @@ class StepEvent:
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  slab_len: int = 256, temperature: float = 1.0,
-                 weight_version: int = 0):
+                 weight_version: int = 0, page_size: int = 16,
+                 prefill_chunk: int = 256, max_context: Optional[int] = None):
+        """``slab_len`` sizes the initial pool (max_batch * slab_len tokens)
+        and the local-attention ring width; unlike the old dense slab it is
+        NOT a hard length cap — pages are allocated (and the pool grown) on
+        demand, bounded only by ``max_context`` when set."""
         self.cfg = cfg
         self.params = params
         self.weight_version = weight_version
         self.max_batch = max_batch
         self.slab_len = slab_len
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
         self.temperature = temperature
-        self.cache = kvc.init_cache(cfg, max_batch, slab_len, jnp.float32)
+        self.max_context = max_context
+        mixers = cfg.layer_mixers()
+        # chunked (multi-step) prompt prefill needs stateless-across-chunks
+        # layers; models with SSM/ring state prefill each context in one chunk
+        self._chunkable = all(m == "global" for m in mixers)
+        num_pages = max(2 * (max_batch * slab_len) // page_size, 8) + 1
+        self.alloc = PagedKVAllocator(num_pages, page_size)
+        self.cache = kvc.init_paged_cache(cfg, max_batch, num_pages,
+                                          page_size, ring_len=slab_len,
+                                          dtype=jnp.float32)
         self.slots: List[Optional[SlotState]] = [None] * max_batch
+        self._reserved: Dict[int, int] = {}     # req_id -> slot (waiting)
+        self.waiting: List[_WaitRow] = []
         self.tokens_buf = np.zeros((max_batch,), np.int32)
         self.keys_buf = np.zeros((max_batch, 2), np.uint32)
+        # perf counters (prefix-sharing / dedup visibility)
+        self.n_prefills = 0                     # context prefills (rows)
+        self.n_prefill_tokens = 0
+        self.n_shared_prompt_tokens = 0         # tokens NOT re-prefilled
 
     # ------------------------------------------------------------------ #
     def load_weights(self, params, version: int):
@@ -123,55 +201,148 @@ class InferenceEngine:
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
-    def free_slots(self) -> int:
-        return self.max_batch - self.n_active
+    @property
+    def supports_prefix_sharing(self) -> bool:
+        """Group prompt sharing needs per-slot state to be limited to the
+        paged pools (all-global attention) — SSM/ring rows are not forked."""
+        return self._chunkable
 
+    def free_slots(self) -> int:
+        return self.max_batch - self.n_active - len(self._reserved)
+
+    # ------------------------------------------------------------------ #
+    # admission
+    # ------------------------------------------------------------------ #
+    def _check_admission(self, L: int, max_total: int, need_slots: int = 1):
+        if self.free_slots() < need_slots:
+            raise AdmissionError(
+                f"engine full: need {need_slots} slots, "
+                f"{self.free_slots()} free")
+        if self.max_context is not None:
+            if max(L, max_total) > self.max_context:
+                raise AdmissionError(
+                    f"context {max(L, max_total)} exceeds max_context "
+                    f"{self.max_context}")
+
+    def _alloc_table(self, n_tokens: int) -> List[int]:
+        while True:
+            try:
+                return self.alloc.alloc_table(n_tokens)
+            except OutOfPages:
+                self._grow_pool()
+
+    def _ensure_capacity(self, table: List[int], n_tokens: int):
+        while True:
+            try:
+                self.alloc.ensure_capacity(table, n_tokens)
+                return
+            except OutOfPages:
+                self._grow_pool()
+
+    def _writable_page(self, table: List[int], pos: int):
+        while True:
+            try:
+                return self.alloc.writable_page(table, pos)
+            except OutOfPages:
+                self._grow_pool()
+
+    def _grow_pool(self):
+        new_num = 2 * self.alloc.num_pages
+        self.cache = kvc.grow_pool(self.cache, new_num)
+        self.alloc.grow(new_num)
+
+    def _free_slot(self, slot: int):
+        st = self.slots[slot]
+        if st is not None and st.table:
+            self.alloc.free_table(st.table)
+        self.slots[slot] = None
+
+    def _reserve_slot(self, req_id: int) -> int:
+        taken = set(self._reserved.values())
+        slot = next(i for i, s in enumerate(self.slots)
+                    if s is None and i not in taken)
+        self._reserved[req_id] = slot
+        return slot
+
+    # ------------------------------------------------------------------ #
+    # request intake
     # ------------------------------------------------------------------ #
     def add_request(self, req_id: int, token_ids: List[int], key,
-                    max_total: int, n_prompt: int) -> Tuple[int, StepEvent]:
-        """Prefill prompt(+partial) into a free slot; returns (slot, first
-        emitted token event).  ``token_ids`` may include previously generated
-        tokens (migration continuation)."""
-        if self.free_slots() == 0:
-            raise RuntimeError("engine full: no free slots")
-        slot = next(i for i, s in enumerate(self.slots) if s is None)
+                    max_total: int, n_prompt: int) -> int:
+        """Queue prompt(+partial) for batched prefill; returns the reserved
+        slot.  The first emitted token arrives from the next ``step()``.
+        ``token_ids`` may include previously generated tokens (migration
+        continuation)."""
         L = len(token_ids)
-        assert L < self.slab_len, (L, self.slab_len)
-        bucket = min(_bucket(L), self.slab_len)
-        toks = np.zeros((bucket,), np.int32)
-        toks[:L] = token_ids
-        mask = np.zeros((bucket,), np.float32)
-        mask[:L] = 1.0
+        self._check_admission(L, max_total)
+        slot = self._reserve_slot(req_id)
         key_data = np.asarray(jax.random.key_data(key), np.uint32)
-        fn = _get_prefill_fn(self.cfg, bucket, self.temperature)
-        self.cache, nxt, lp = fn(self.params, self.cache, jnp.asarray(toks),
-                                 jnp.asarray(mask), slot,
-                                 jnp.asarray(key_data))
-        nxt = int(nxt)
-        st = SlotState(req_id=req_id, key_data=key_data,
-                       tokens=list(token_ids) + [nxt], n_prompt=n_prompt,
-                       max_total=max_total, last_token=nxt)
-        self.slots[slot] = st
-        self.tokens_buf[slot] = nxt
-        self.keys_buf[slot] = key_data
-        done = (nxt == EOS) or (len(st.tokens) >= st.max_total)
-        ev = StepEvent(req_id=req_id, token=nxt, logprob=float(lp),
-                       finished=done)
-        if done:
-            self.slots[slot] = None
-        return slot, ev
+        table = self._alloc_table(L)
+        self.waiting.append(_WaitRow(
+            token_ids=list(token_ids), table=table,
+            members=[(req_id, key_data, max_total, n_prompt, slot)]))
+        return slot
+
+    def add_group(self, members: List[Tuple[int, object, int]],
+                  prompt_ids: List[int], n_prompt: int) -> List[int]:
+        """Queue a GRPO group sharing one prompt prefill.
+
+        members: [(req_id, key, max_total)] — all siblings sample from the
+        same prompt.  The prompt is prefilled once; its pages are ref-counted
+        and shared copy-on-write across the G block tables.
+        Returns the reserved slots (one per member).
+        """
+        L = len(prompt_ids)
+        max_tot = max(m[2] for m in members)
+        self._check_admission(L, max_tot, need_slots=len(members))
+        table = self._alloc_table(L)
+        row = _WaitRow(token_ids=list(prompt_ids), table=table, members=[])
+        slots = []
+        for req_id, key, max_total in members:
+            slot = self._reserve_slot(req_id)
+            key_data = np.asarray(jax.random.key_data(key), np.uint32)
+            row.members.append((req_id, key_data, max_total, n_prompt, slot))
+            slots.append(slot)
+        self.waiting.append(row)
+        self.n_shared_prompt_tokens += L * (len(members) - 1)
+        return slots
 
     # ------------------------------------------------------------------ #
+    # scheduler step: decode phase, then prefill phase (token budget)
+    # ------------------------------------------------------------------ #
     def step(self) -> List[StepEvent]:
-        """One batched decode step over all active slots."""
+        events = self._decode_phase()
+        events.extend(self._prefill_phase())
+        return events
+
+    # ---------------- decode ---------------- #
+    def _decode_phase(self) -> List[StepEvent]:
         active = np.array([s is not None for s in self.slots])
         if not active.any():
             return []
-        fn = _get_decode_fn(self.cfg, self.temperature)
+        # host-side page bookkeeping: capacity + copy-on-write
+        copies: List[Tuple[int, int]] = []
+        for st in self.slots:
+            if st is None:
+                continue
+            self._ensure_capacity(st.table, st.ctx_len + 1)
+            _, cp = self._writable_page(st.table, st.ctx_len)
+            if cp is not None:
+                copies.append(cp)
+        if copies:
+            m = _bucket(len(copies), minimum=1)
+            src = np.full((m,), GARBAGE_PAGE, np.int32)
+            dst = np.full((m,), GARBAGE_PAGE, np.int32)
+            src[:len(copies)] = [c[0] for c in copies]
+            dst[:len(copies)] = [c[1] for c in copies]
+            fn = _get_copy_fn(self.cfg, m)
+            self.cache = fn(self.cache, jnp.asarray(src), jnp.asarray(dst))
+        bt = self._block_tables()
+        fn = _get_decode_fn(self.cfg, bt.shape[1], self.temperature)
         self.cache, nxt, lps = fn(self.params, self.cache,
                                   jnp.asarray(self.tokens_buf),
                                   jnp.asarray(self.keys_buf),
-                                  jnp.asarray(active))
+                                  jnp.asarray(active), jnp.asarray(bt))
         nxt = np.asarray(nxt)
         lps = np.asarray(lps)
         events = []
@@ -181,12 +352,104 @@ class InferenceEngine:
             t = int(nxt[i])
             st.tokens.append(t)
             st.last_token = t
+            st.ctx_len += 1
             self.tokens_buf[i] = t
             done = (t == EOS) or (len(st.tokens) >= st.max_total)
             events.append(StepEvent(req_id=st.req_id, token=t,
                                     logprob=float(lps[i]), finished=done))
             if done:
-                self.slots[i] = None
+                self._free_slot(i)
+        return events
+
+    def _block_tables(self) -> np.ndarray:
+        widths = [len(s.table) for s in self.slots if s is not None]
+        nb = _bucket(max(widths + [1]), minimum=4)
+        bt = np.full((self.max_batch, nb), GARBAGE_PAGE, np.int32)
+        for i, st in enumerate(self.slots):
+            if st is not None:
+                bt[i, :len(st.table)] = st.table
+        return bt
+
+    # ---------------- prefill ---------------- #
+    def _prefill_phase(self) -> List[StepEvent]:
+        if not self.waiting:
+            return []
+        budget = max(self.prefill_chunk, 1)
+        chosen: List[Tuple[_WaitRow, int, int]] = []   # (row, start, take)
+        for row in self.waiting:
+            if budget <= 0:
+                break
+            rem = len(row.token_ids) - row.done
+            take = min(rem, budget) if self._chunkable else rem
+            chosen.append((row, row.done, take))
+            budget -= take
+        n_rows = len(chosen)
+        n = _bucket(n_rows, minimum=1)
+        C = _bucket(max(take for _, _, take in chosen))
+        toks = np.zeros((n, C), np.int32)
+        mask = np.zeros((n, C), np.float32)
+        offsets = np.zeros((n,), np.int32)
+        slot_idx = np.full((n,), self.max_batch, np.int32)  # OOB => dropped
+        widths = [len(row.table) for row, _, _ in chosen]
+        nb = _bucket(max(widths), minimum=4)
+        bt = np.full((n, nb), GARBAGE_PAGE, np.int32)
+        for i, (row, start, take) in enumerate(chosen):
+            toks[i, :take] = row.token_ids[start:start + take]
+            mask[i, :take] = 1.0
+            offsets[i] = start
+            slot_idx[i] = row.members[0][4]     # owner slot's state rows
+            bt[i, :len(row.table)] = row.table
+        fn = _get_prefill_fn(self.cfg, n, C, nb)
+        self.cache, logits = fn(self.params, self.cache,
+                                jnp.asarray(slot_idx), jnp.asarray(toks),
+                                jnp.asarray(mask), jnp.asarray(offsets),
+                                jnp.asarray(bt))
+        logits = np.asarray(logits)
+
+        events: List[StepEvent] = []
+        sample = _get_sample_fn(self.temperature)
+        pos_fix: List[Tuple[int, int]] = []     # sibling slots need pos = L
+        for i, (row, start, take) in enumerate(chosen):
+            row.done += take
+            self.n_prefill_tokens += take
+            if row.done < len(row.token_ids):
+                continue                         # more chunks to go
+            self.waiting.remove(row)
+            self.n_prefills += 1
+            L = len(row.token_ids)
+            lrow = jnp.asarray(logits[i])
+            # fork every sibling table BEFORE emitting any events: the owner
+            # may finish (EOS / max_total) immediately, and freeing its table
+            # must not strip pages later siblings still need
+            tables = [row.table] + [self.alloc.fork(row.table)
+                                    for _ in row.members[1:]]
+            for j, (req_id, key_data, max_total, n_prompt, slot) in \
+                    enumerate(row.members):
+                table = tables[j]
+                nxt, lp = sample(lrow, jnp.asarray(key_data),
+                                 jnp.asarray(L - 1, jnp.int32))
+                nxt = int(nxt)
+                st = SlotState(req_id=req_id, key_data=key_data,
+                               tokens=list(row.token_ids) + [nxt],
+                               n_prompt=n_prompt, max_total=max_total,
+                               last_token=nxt, table=table, ctx_len=L)
+                del self._reserved[req_id]
+                self.slots[slot] = st
+                self.tokens_buf[slot] = nxt
+                self.keys_buf[slot] = key_data
+                if j > 0:
+                    pos_fix.append((slot, L))
+                done = (nxt == EOS) or (len(st.tokens) >= st.max_total)
+                events.append(StepEvent(req_id=req_id, token=nxt,
+                                        logprob=float(lp), finished=done))
+                if done:
+                    self._free_slot(slot)
+        if pos_fix:
+            # the prefill scatter set pos only on the owner's slot row;
+            # group siblings share the same context length
+            idx = jnp.asarray([s for s, _ in pos_fix], jnp.int32)
+            val = jnp.asarray([v for _, v in pos_fix], jnp.int32)
+            self.cache["pos"] = self.cache["pos"].at[idx].set(val)
         return events
 
     # ------------------------------------------------------------------ #
@@ -194,9 +457,22 @@ class InferenceEngine:
         """Remove a request (migration away); returns its token history."""
         for i, st in enumerate(self.slots):
             if st is not None and st.req_id == req_id:
-                self.slots[i] = None
-                return list(st.tokens)
+                toks = list(st.tokens)
+                self._free_slot(i)
+                return toks
+        for row in self.waiting:
+            for m in row.members:
+                if m[0] == req_id:
+                    row.members.remove(m)
+                    self._reserved.pop(req_id, None)
+                    toks = list(row.token_ids)
+                    if not row.members:
+                        self.alloc.free_table(row.table)
+                        self.waiting.remove(row)
+                    return toks
         return None
 
     def active_request_ids(self) -> List[int]:
-        return [s.req_id for s in self.slots if s is not None]
+        ids = [s.req_id for s in self.slots if s is not None]
+        ids.extend(m[0] for row in self.waiting for m in row.members)
+        return ids

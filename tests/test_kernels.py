@@ -9,6 +9,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
@@ -55,6 +56,64 @@ def test_decode_attention(B, H, K, T, d, window, cap, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,ps,nb,d,cap", [
+    (4, 4, 2, 16, 8, 64, 0.0),               # GQA
+    (2, 8, 8, 32, 4, 64, 0.0),               # MHA
+    (3, 4, 1, 8, 16, 128, 30.0),             # MQA + softcap
+])
+def test_paged_decode_attention(B, H, K, ps, nb, d, cap, dtype):
+    """Ragged paged kernel vs the gather-then-dense oracle, including
+    length 0, lengths on a page boundary, and lengths spanning pages."""
+    P = 1 + B * nb                             # page 0 = garbage
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = jax.random.normal(ks[0], (B, H, d), dtype)
+    kp = jax.random.normal(ks[1], (P, ps, K, d), dtype)
+    vp = jax.random.normal(ks[2], (P, ps, K, d), dtype)
+    perm = np.random.RandomState(3).permutation(P - 1)[:B * nb] + 1
+    bt = jnp.asarray(perm.reshape(B, nb), jnp.int32)
+    # first rows pin the edge cases, the rest are random ragged lengths
+    edge = [0, ps, ps + 1, nb * ps]
+    lens = np.asarray(
+        (edge + list(np.random.RandomState(4).randint(1, nb * ps + 1,
+                                                      size=B)))[:B],
+        np.int32)
+    lengths = jnp.asarray(lens)
+    out = paged_decode_attention(q, kp, vp, bt, lengths, cap=cap,
+                                 interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths, cap=cap)
+    tol = 1e-2 if dtype == jnp.bfloat16 else TOL[dtype]
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    assert err <= tol, err
+    if lens[0] == 0:
+        assert float(jnp.abs(out[0]).max()) == 0.0
+
+
+def test_paged_matches_dense_decode_attention():
+    """Paged layout == dense slab layout for the same logical KV."""
+    B, H, K, ps, nb, d = 2, 4, 2, 8, 8, 32
+    T = ps * nb
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    q = jax.random.normal(ks[0], (B, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, T, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, T, d), jnp.float32)
+    lengths = jnp.asarray([T // 2 + 3, T], jnp.int32)
+    # scatter the dense slab into pages following a block table
+    perm = np.random.RandomState(7).permutation(B * nb) + 1
+    bt = jnp.asarray(perm.reshape(B, nb), jnp.int32)
+    kp = jnp.zeros((1 + B * nb, ps, K, d), jnp.float32)
+    vp = jnp.zeros_like(kp)
+    kt = k.transpose(0, 2, 1, 3).reshape(B, nb, ps, K, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(B, nb, ps, K, d)
+    kp = kp.at[bt.reshape(-1)].set(kt.reshape(B * nb, ps, K, d))
+    vp = vp.at[bt.reshape(-1)].set(vt.reshape(B * nb, ps, K, d))
+    out = paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -4,7 +4,9 @@ A request migrated between engines (one prefill over prompt+partial, paper
 Fig 5) continues with exactly the tokens it would have produced on the
 source — for greedy AND temperature sampling (position-keyed sampling,
 repro.rl.sampler).  This is the paper's §6.5 algorithm-integrity claim at
-the single-request level.
+the single-request level — now on the PAGED engine: the continuation
+re-materialises fresh pages on the destination, and small page sizes /
+chunked prefill must not perturb the token stream.
 """
 
 import jax
@@ -19,28 +21,36 @@ from repro.rl.sampler import request_key
 from repro.serving.engine import InferenceEngine
 
 
-def _mk(arch="qwen2-7b", temperature=1.0, seed=0):
+def _mk(arch="qwen2-7b", temperature=1.0, seed=0, **eng_kw):
     cfg = get_config(arch).reduced(n_heads=2, n_kv_heads=1, d_model=32,
                                    head_dim=16, d_ff=64,
                                    vocab_size=tok.VOCAB_SIZE)
     params = init_params(cfg, jax.random.PRNGKey(seed))
-    mk = lambda: InferenceEngine(cfg, params, max_batch=4, slab_len=128,
-                                 temperature=temperature)
+    kw = dict(max_batch=4, slab_len=128, temperature=temperature)
+    kw.update(eng_kw)
+    mk = lambda: InferenceEngine(cfg, params, **kw)
     return cfg, params, mk
 
 
 def _drive(engine, req_id, prompt, key, max_total, n_steps=None):
-    slot, ev = engine.add_request(req_id, prompt, key, max_total,
-                                  len(prompt))
-    out = [(ev.token, ev.logprob)]
-    done = ev.finished
+    """Add one request and run it to completion (or n_steps tokens).
+
+    The first token arrives from the step() that finishes the (possibly
+    chunked) prefill; steps with no event for this request are skipped.
+    """
+    engine.add_request(req_id, prompt, key, max_total, len(prompt))
+    out = []
+    done = False
     while not done and (n_steps is None or len(out) < n_steps):
         evs = engine.step()
         mine = [e for e in evs if e.req_id == req_id]
         if not mine:
-            break
-        out.append((mine[0].token, mine[0].logprob))
-        done = mine[0].finished
+            if req_id not in engine.active_request_ids():
+                break
+            continue                      # prompt still chunk-prefilling
+        for e in mine:
+            out.append((e.token, e.logprob))
+            done = e.finished
     return out, done
 
 
@@ -62,6 +72,7 @@ def test_migration_bit_exact(temperature):
     part_tokens = [t for t, _ in part]
     assert part_tokens == full_tokens[:len(part_tokens)]
     dropped = engB.drop_request(42)
+    assert dropped == prompt + part_tokens
     ctx = prompt + part_tokens
 
     engC = mk()
@@ -69,6 +80,51 @@ def test_migration_bit_exact(temperature):
     rest_tokens = [t for t, _ in rest]
     assert part_tokens + rest_tokens == full_tokens, (
         part_tokens, rest_tokens, full_tokens)
+
+
+@pytest.mark.parametrize("page_size", [4, 16])
+def test_migration_bit_exact_small_pages(page_size):
+    """Paged continuation across page boundaries: the migrated context
+    re-materialises pages on the destination engine bit-exactly, with the
+    partial straddling a page boundary."""
+    cfg, params, mk = _mk(temperature=1.0, page_size=page_size, slab_len=32)
+    prompt = tok.encode("25*4=")
+    key = request_key(5, 9)
+    max_total = len(prompt) + 20
+
+    engA = mk()
+    full, _ = _drive(engA, 9, prompt, key, max_total)
+    full_tokens = [t for t, _ in full]
+
+    # split at a token count that is NOT page aligned
+    n_cut = page_size + 1
+    engB = mk()
+    part, _ = _drive(engB, 9, prompt, key, max_total, n_steps=n_cut)
+    part_tokens = [t for t, _ in part]
+    engB.drop_request(9)
+    engC = mk()
+    rest, _ = _drive(engC, 9, prompt + part_tokens, key, max_total)
+    assert part_tokens + [t for t, _ in rest] == full_tokens
+
+
+def test_migration_bit_exact_chunked_prefill():
+    """A destination engine with a tiny prefill token budget (multi-step
+    chunked prompt prefill) continues the same token stream."""
+    cfg, params, mk = _mk(temperature=1.0, prefill_chunk=4)
+    prompt = tok.encode("9*8=")
+    key = request_key(3, 11)
+    max_total = len(prompt) + 16
+
+    cfg2, params2, mk_plain = _mk(temperature=1.0)
+    engA = mk_plain()
+    full, _ = _drive(engA, 11, prompt, key, max_total)
+    engB = mk_plain()
+    part, _ = _drive(engB, 11, prompt, key, max_total, n_steps=5)
+    part_tokens = [t for t, _ in part]
+    engB.drop_request(11)
+    engC = mk()                      # chunked prefill of prompt+partial
+    rest, _ = _drive(engC, 11, prompt + part_tokens, key, max_total)
+    assert part_tokens + [t for t, _ in rest] == [t for t, _ in full]
 
 
 def test_migration_logprobs_consistent():
@@ -89,7 +145,8 @@ def test_migration_logprobs_consistent():
 
 def test_continuous_batching_isolation():
     """Concurrent requests in one engine don't perturb each other: results
-    equal single-request runs."""
+    equal single-request runs (prefill is batched across the waiting
+    requests in one token-budget chunk, decode is batched across slots)."""
     cfg, params, mk = _mk(temperature=0.0)
     prompts = [tok.encode(p) for p in ["1+1=", "25*4=", "7-9="]]
     keys = [request_key(1, i) for i in range(3)]
@@ -101,13 +158,10 @@ def test_continuous_batching_isolation():
         solo.append([t for t, _ in out])
 
     eng = mk()
+    for i, (p, k) in enumerate(zip(prompts, keys)):
+        eng.add_request(i, p, k, len(p) + 10, len(p))
     outs = {i: [] for i in range(3)}
     done = set()
-    for i, (p, k) in enumerate(zip(prompts, keys)):
-        slot, ev = eng.add_request(i, p, k, len(p) + 10, len(p))
-        outs[i].append(ev.token)
-        if ev.finished:
-            done.add(i)
     while len(done) < 3:
         for e in eng.step():
             outs[e.req_id].append(e.token)
@@ -115,3 +169,20 @@ def test_continuous_batching_isolation():
                 done.add(e.req_id)
     for i in range(3):
         assert outs[i] == solo[i], i
+
+
+def test_drop_from_waiting_queue():
+    """Dropping a request that is still waiting for prefill returns its
+    context and releases its slot and pages."""
+    cfg, params, mk = _mk(temperature=0.0)
+    eng = mk()
+    prompt = tok.encode("1+2=")
+    free0 = eng.alloc.n_free
+    eng.add_request(77, prompt, request_key(0, 77), len(prompt) + 8,
+                    len(prompt))
+    assert 77 in eng.active_request_ids()
+    hist = eng.drop_request(77)
+    assert hist == prompt
+    assert eng.free_slots() == eng.max_batch
+    assert eng.alloc.n_free == free0
+    assert eng.step() == []

@@ -1,0 +1,239 @@
+"""Paged-KV engine tests: GRPO prompt prefix sharing (1 prefill per group,
+COW page refcounts), admission control, pool growth past the old slab cap,
+and group-aware admission through the rollout instance."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import tokenizer as tok
+from repro.models import init_params
+from repro.models.kv_cache import GARBAGE_PAGE, OutOfPages, PagedKVAllocator
+from repro.rl.sampler import request_key
+from repro.serving.engine import AdmissionError, InferenceEngine
+
+
+def _mk(temperature=1.0, seed=0, **eng_kw):
+    cfg = get_config("qwen2-7b").reduced(n_heads=2, n_kv_heads=1, d_model=32,
+                                         head_dim=16, d_ff=64,
+                                         vocab_size=tok.VOCAB_SIZE)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    kw = dict(max_batch=4, slab_len=64, temperature=temperature,
+              page_size=8)
+    kw.update(eng_kw)
+    return cfg, params, (lambda: InferenceEngine(cfg, params, **kw))
+
+
+def _drive(engine, req_id, prompt, key, max_total):
+    engine.add_request(req_id, prompt, key, max_total, len(prompt))
+    out, done = [], False
+    while not done:
+        evs = engine.step()
+        mine = [e for e in evs if e.req_id == req_id]
+        if not mine:
+            if req_id not in engine.active_request_ids():
+                break
+            continue
+        for e in mine:
+            out.append((e.token, e.logprob))
+            done = e.finished
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# allocator unit behavior
+# --------------------------------------------------------------------------- #
+def test_allocator_free_list_and_refcounts():
+    a = PagedKVAllocator(num_pages=9, page_size=4)
+    assert a.n_free == 8                       # page 0 reserved (garbage)
+    t = a.alloc_table(10)                      # ceil(10/4) = 3 pages
+    assert len(t) == 3 and GARBAGE_PAGE not in t
+    assert all(a.ref[p] == 1 for p in t)
+    f = a.fork(t)
+    assert f == t and all(a.ref[p] == 2 for p in t)
+    # COW: writing into a shared page copies it out
+    page, cp = a.writable_page(f, 9)           # page idx 2
+    assert cp is not None and cp[0] == t[2] and cp[1] == page
+    assert f[2] != t[2] and a.ref[t[2]] == 1 and a.ref[f[2]] == 1
+    # sole owner writes in place
+    page2, cp2 = a.writable_page(f, 9)
+    assert cp2 is None and page2 == f[2]
+    a.free_table(f)
+    a.free_table(t)
+    assert a.n_free == 8
+    with pytest.raises(OutOfPages):
+        a.alloc(9)
+
+
+def test_allocator_grow():
+    a = PagedKVAllocator(num_pages=3, page_size=4)
+    a.alloc(2)
+    with pytest.raises(OutOfPages):
+        a.alloc(1)
+    a.grow(6)
+    assert a.n_free == 3
+    a.alloc(3)
+
+
+# --------------------------------------------------------------------------- #
+# GRPO prefix sharing
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_group_prefix_sharing_bit_exact(temperature):
+    """A GRPO group of G=4 produces tokens identical to 4 independent
+    requests while performing exactly ONE prompt prefill."""
+    cfg, params, mk = _mk(temperature=temperature)
+    prompt = tok.encode("12+34=")
+    G = 4
+    members = [(100 + i, request_key(7, 100 + i), len(prompt) + 10)
+               for i in range(G)]
+
+    eng = mk()
+    eng.add_group(members, prompt, len(prompt))
+    assert eng.n_prefills == 0
+    outs = {m[0]: [] for m in members}
+    lps = {m[0]: [] for m in members}
+    done = set()
+    while len(done) < G:
+        for e in eng.step():
+            outs[e.req_id].append(e.token)
+            lps[e.req_id].append(e.logprob)
+            if e.finished:
+                done.add(e.req_id)
+    assert eng.n_prefills == 1, "group must prefill the prompt exactly once"
+    assert eng.n_shared_prompt_tokens == (G - 1) * len(prompt)
+
+    for rid, key, max_total in members:
+        solo_eng = mk()
+        solo = _drive(solo_eng, rid, prompt, key, max_total)
+        assert [t for t, _ in solo] == outs[rid], rid
+        np.testing.assert_allclose([lp for _, lp in solo], lps[rid],
+                                   atol=1e-4)
+
+
+def test_group_prompt_pages_shared_and_cow():
+    """After the shared prefill, all G block tables reference the same
+    prompt pages (refcount == G); the first decode step copy-on-writes the
+    partial boundary page; everything is freed at completion."""
+    cfg, params, mk = _mk(temperature=0.0, page_size=4)
+    prompt = tok.encode("25*4=")              # len 7 => 2 pages, 2nd partial
+    G = 4
+    members = [(i, request_key(1, i), len(prompt) + 6) for i in range(G)]
+    eng = mk()
+    free0 = eng.alloc.n_free
+    eng.add_group(members, prompt, len(prompt))
+    evs = eng.step()                          # prefill + first tokens
+    assert len(evs) == G
+    tables = [s.table for s in eng.slots if s is not None]
+    assert len(tables) == G
+    # full prompt pages are shared by all G siblings
+    shared = set(tables[0]) & set(tables[1]) & set(tables[2]) & set(tables[3])
+    assert shared, "siblings share no pages"
+    for p in shared:
+        assert eng.alloc.ref[p] == G, (p, eng.alloc.ref[p])
+    boundary = tables[0][-1]
+    eng.step()                                # decode: COW the boundary page
+    tables2 = [s.table for s in eng.slots if s is not None]
+    boundaries = {t[-1] for t in tables2}
+    assert len(boundaries) == G, "boundary page not copied per sibling"
+    for t in tables2:
+        assert eng.alloc.ref[t[-1]] == 1
+    # run to completion: no page leaks
+    done = set()
+    while len(done) < G:
+        for e in eng.step():
+            if e.finished:
+                done.add(e.req_id)
+    assert eng.alloc.n_free == free0
+
+
+def test_group_admission_through_instance():
+    """RolloutInstance admits fresh same-prompt siblings as one engine
+    group (prefill-dedup accounting + add_group path)."""
+    from repro.core.events import EventLoop
+    from repro.core.instance import RolloutInstance
+    from repro.core.load_balancer import LoadBalancer
+    from repro.core.perfmodel import SPOT_INSTANCE, ModelPerf
+    from repro.core.requests import Request
+
+    cfg, params, mk = _mk(temperature=0.0)
+    eng = mk()
+
+    class _Mgr:
+        required_version = 0
+        lb = LoadBalancer()
+        def on_token(self, r, inst): pass
+        def on_complete(self, r, inst): pass
+
+    loop = EventLoop()
+    inst = RolloutInstance(0, loop, SPOT_INSTANCE,
+                           ModelPerf(n_params=1e9, n_active=1e9), _Mgr(),
+                           max_exec=4, engine=eng)
+    inst.weight_version = 0
+    prompt = tok.encode("1+1=")
+    reqs = [Request(id=i, group=7, prompt_len=len(prompt),
+                    max_total=len(prompt) + 6, prompt_ids=list(prompt))
+            for i in range(4)]
+    inst.assign_many(reqs)
+    loop.run()
+    assert eng.n_prefills == 1                # one shared prompt prefill
+    assert all(r.n_generated > 0 for r in reqs)
+
+
+def test_group_owner_finishing_at_prefill_keeps_shared_pages():
+    """The group's owner (first member) hitting max_total on its first
+    sampled token must not free the shared prompt pages out from under the
+    siblings — their tables are forked before any completion is handled."""
+    cfg, params, mk = _mk(temperature=0.0, page_size=4)
+    prompt = tok.encode("12+34=")
+    # owner finishes immediately (max_total = L + 1); siblings keep going
+    members = [(0, request_key(2, 0), len(prompt) + 1),
+               (1, request_key(2, 1), len(prompt) + 8),
+               (2, request_key(2, 2), len(prompt) + 8)]
+    eng = mk()
+    free0 = eng.alloc.n_free
+    eng.add_group(members, prompt, len(prompt))
+    outs = {m[0]: [] for m in members}
+    done = set()
+    while len(done) < 3:
+        for e in eng.step():
+            outs[e.req_id].append(e.token)
+            if e.finished:
+                done.add(e.req_id)
+    assert len(outs[0]) == 1
+    for rid, key, max_total in members[1:]:
+        solo_eng = mk()
+        solo = _drive(solo_eng, rid, prompt, key, max_total)
+        assert [t for t, _ in solo] == outs[rid], rid
+    assert eng.alloc.n_free == free0
+
+
+# --------------------------------------------------------------------------- #
+# admission control + capacity
+# --------------------------------------------------------------------------- #
+def test_admission_errors():
+    cfg, params, mk = _mk(max_batch=1, max_context=32, temperature=0.0)
+    eng = mk()
+    prompt = tok.encode("7*8=")
+    eng.add_request(1, prompt, request_key(0, 1), 20, len(prompt))
+    with pytest.raises(AdmissionError):       # engine full
+        eng.add_request(2, prompt, request_key(0, 2), 20, len(prompt))
+    eng2 = mk()
+    with pytest.raises(AdmissionError):       # over max_context
+        eng2.add_request(3, prompt, request_key(0, 3), 64, len(prompt))
+
+
+def test_response_longer_than_slab():
+    """The old dense engine asserted L < slab_len; under paging a request
+    may exceed slab_len * anything — the pool allocates/grows on demand."""
+    cfg, params, mk = _mk(max_batch=2, slab_len=8, page_size=4,
+                          temperature=0.0)
+    eng = mk()
+    prompt = tok.encode("12+34=")
+    assert len(prompt) + 40 > 8 * 4           # far beyond the old slab cap
+    out = _drive(eng, 1, prompt, request_key(0, 1), len(prompt) + 40)
+    total = len(prompt) + len(out)
+    assert total > 8, "response never outgrew the old slab"
+    # all pages returned after completion
+    assert eng.alloc.n_free == eng.alloc.num_pages - 1
