@@ -15,8 +15,8 @@ import traceback
 from benchmarks import (bench_fault_handling, bench_integrity, bench_kernels,
                         bench_motivation, bench_response_length,
                         bench_seeding_ablation, bench_static_instances,
-                        bench_trace_throughput, bench_weight_transfer,
-                        roofline)
+                        bench_trace_throughput, bench_transfer,
+                        bench_weight_transfer, roofline)
 
 BENCHES = [
     ("fig2_motivation", bench_motivation.main),
@@ -25,6 +25,7 @@ BENCHES = [
     ("fig12_seeding_ablation", bench_seeding_ablation.main),
     ("fig13_response_length", bench_response_length.main),
     ("fig14_17_weight_transfer", bench_weight_transfer.main),
+    ("transfer_plane", bench_transfer.main),
     ("fig15_fault_handling", bench_fault_handling.main),
     ("fig16_integrity", bench_integrity.main),
     ("kernels", bench_kernels.main),

@@ -33,6 +33,7 @@ from repro.core.rollout_manager import RolloutManager
 from repro.core.seeding import SeedingScheduler, StepStats
 from repro.core.trace import TraceEvent
 from repro.core.weight_transfer import TransferAgent, WeightStore
+from repro.transfer.chunkstore import ChunkStore
 
 
 @dataclass
@@ -55,6 +56,9 @@ class RunnerConfig:
     fault_mode: str = "migrate"
     transfer_mode: str = "pull"
     compression: str = "none"
+    transfer_chunks: int = 32              # sim manifest chunk count
+    transfer_fanout: int = 2               # concurrent chunk fetches / pull
+    chunk_bytes: int = 1 << 20             # real-backend manifest chunking
     disagg_instances: int = 0              # fixed pool for disagg mode
     seed: int = 0
     snapshot_d2h_bw: float = 5.0e10        # weight snapshot to host, B/s
@@ -77,7 +81,9 @@ class HybridRunner:
         agents = [TransferAgent(i, RESERVED_NODE.dcn_gbps
                                 * cfg.transfer_gbps_scale)
                   for i in range(cfg.n_reserved_nodes)]
-        self.store = WeightStore(agents)
+        self.store = WeightStore(
+            agents, chunkstore=ChunkStore(chunk_bytes=cfg.chunk_bytes),
+            weight_bytes=perf.weight_bytes, sim_chunks=cfg.transfer_chunks)
         spot = InstanceKind(SPOT_INSTANCE.name, SPOT_INSTANCE.chips,
                             SPOT_INSTANCE.dcn_gbps * cfg.transfer_gbps_scale)
         self.manager = RolloutManager(
@@ -87,7 +93,8 @@ class HybridRunner:
             fault_mode=cfg.fault_mode, transfer_mode=cfg.transfer_mode,
             compression=cfg.compression, cfg=model_cfg,
             engine_factory=engine_factory,
-            max_exec_per_instance=cfg.remote_max_exec, seed=cfg.seed)
+            max_exec_per_instance=cfg.remote_max_exec, seed=cfg.seed,
+            transfer_fanout=cfg.transfer_fanout)
         self.scheduler = SeedingScheduler(
             n_resv=cfg.n_local_engines * cfg.n_reserved_nodes,
             eta=cfg.eta, t_init=cfg.t_seed_init,
@@ -127,9 +134,13 @@ class HybridRunner:
     def _capacity_change(self, delta: int):
         self.capacity = max(self.capacity + delta, 0)
         if delta < 0:
-            remotes = [i for i in self.manager.instances.values()
-                       if i.alive and not i.local]
-            if remotes and self.manager.n_remote() > self.capacity:
+            # a trace event may reclaim SEVERAL instances at once (multi-
+            # node preemption): evict oldest-first until within capacity
+            while self.manager.n_remote() > self.capacity:
+                remotes = [i for i in self.manager.instances.values()
+                           if i.alive and not i.local]
+                if not remotes:
+                    break
                 victim = min(remotes, key=lambda i: i.created_t)
                 self.manager.preempt(victim)
         self._reconcile()

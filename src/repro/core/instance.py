@@ -26,7 +26,7 @@ class RolloutInstance:
     def __init__(self, id: int, loop: EventLoop, kind: InstanceKind,
                  perf: ModelPerf, manager, *, max_exec: int = 64,
                  local: bool = False, cfg=None, engine=None,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, chunk_cache=None):
         self.id = id
         self.loop = loop
         self.kind = kind
@@ -39,6 +39,11 @@ class RolloutInstance:
         self.engine = engine               # real backend (InferenceEngine)
         self.alive = True
         self.weight_version = -1
+        # local chunk cache (digest -> payload): survives preempt/restart
+        # via the manager's orphan pool, so resumed pulls fetch only the
+        # missing chunks
+        self.chunk_cache = chunk_cache if chunk_cache is not None else {}
+        self.pull = None                   # active ChunkPull, if any
         self.pending: List[Request] = []
         self.executing: Dict[int, Request] = {}
         self._step_scheduled = False
@@ -164,6 +169,7 @@ class RolloutInstance:
         """Real-backend event: record token + notify manager."""
         r.tokens.append(ev.token)
         r.logprobs.append(ev.logprob)
+        r.stamp_version(ev.weight_version)
         r.n_generated += 1
         self.tokens_out += 1
         self.manager.on_token(r, self)
@@ -191,6 +197,7 @@ class RolloutInstance:
                     self._emit(r, e)
         else:
             for r in list(self.executing.values()):
+                r.stamp_version(self.weight_version)
                 r.n_generated += 1
                 self.tokens_out += 1
                 self.manager.on_token(r, self)

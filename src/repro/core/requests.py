@@ -28,6 +28,9 @@ class Request:
     instance_id: Optional[int] = None
     tokens: List[int] = field(default_factory=list)      # generated tokens
     logprobs: List[float] = field(default_factory=list)
+    # run-length [weight_version, n_tokens] spans over the generated tokens
+    # (staleness accounting across mid-stream weight swaps / migrations)
+    version_spans: List[List[int]] = field(default_factory=list)
     n_generated: int = 0
     n_migrations: int = 0
     created_at: float = 0.0
@@ -44,3 +47,14 @@ class Request:
     def context_ids(self) -> List[int]:
         """prompt + already-generated tokens (migration continuation)."""
         return list(self.prompt_ids or []) + self.tokens
+
+    def stamp_version(self, version: int):
+        """Record one generated token under ``version`` (span run-length)."""
+        if self.version_spans and self.version_spans[-1][0] == version:
+            self.version_spans[-1][1] += 1
+        else:
+            self.version_spans.append([version, 1])
+
+    @property
+    def min_weight_version(self) -> int:
+        return min((v for v, _ in self.version_spans), default=-1)

@@ -1,49 +1,40 @@
-"""Pull-based weight transfer (paper §4.3) + compressed-transfer extensions.
+"""Pull-based weight transfer (paper §4.3) over the chunked transfer plane.
 
 Transfer agents are one-per-training-node processes holding the latest
-host-side weight snapshot.  Rollout instances are paired round-robin and
-*pull* asynchronously: a new/restarted instance fetches the newest version
-at any point within a step, without blocking the training cluster or other
-instances.  The synchronized (push-at-step-boundary) baseline of co-located
-frameworks is kept for the Fig 14/17 ablations.
+host-side weight snapshot.  Rollout instances are paired per CHUNK with the
+least-loaded agent and *pull* asynchronously: a new/restarted instance
+fetches the newest version at any point within a step, without blocking
+the training cluster or other instances.  The synchronized
+(push-at-step-boundary) baseline of co-located frameworks is kept for the
+Fig 14/17 ablations.
 
-Beyond-paper (discussed in §7 of the paper, implemented here):
-  * int8 per-channel quantized transfer (2x compression) and
-  * delta transfer (send int8 deltas vs the receiver's version)
-with real quantize/dequantize utilities used by the real backend and a
-bytes-scale factor used by the simulation.
+The actual mechanics live in ``repro.transfer``: versioned, checksummed,
+content-addressed chunk manifests (``chunkstore``), int8/delta-int8 codecs
+applied per leaf (``codec``), and the resumable multi-peer chunk scheduler
+(``puller``).  ``WeightStore`` is the version registry both backends share:
+with a real snapshot it publishes into a ``ChunkStore`` (real bytes, real
+codecs); without one it serves synthetic manifests sized by the analytic
+``weight_bytes`` — so sim and real pulls run the identical scheduler code.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
-import numpy as np
+from repro.transfer.chunkstore import ChunkStore, Manifest, synthetic_manifest
+from repro.transfer.codec import (COMPRESSION_FACTOR, dequantize_int8,
+                                  quantize_int8)
 
-
-# --------------------------------------------------------------------------- #
-# compression (real math, tested for error bounds)
-# --------------------------------------------------------------------------- #
-def quantize_int8(arr: np.ndarray):
-    a = np.asarray(arr, np.float32)
-    flat = a.reshape(-1, a.shape[-1]) if a.ndim > 1 else a.reshape(1, -1)
-    scale = np.abs(flat).max(axis=0) / 127.0 + 1e-12
-    q = np.clip(np.round(flat / scale), -127, 127).astype(np.int8)
-    return q.reshape(a.shape if a.ndim > 1 else (-1,)), scale
-
-
-def dequantize_int8(q, scale, shape):
-    f = q.astype(np.float32).reshape(-1, q.shape[-1]) * scale
-    return f.reshape(shape)
-
-
-COMPRESSION_FACTOR = {"none": 1.0, "int8": 0.5, "delta-int8": 0.25}
+__all__ = ["COMPRESSION_FACTOR", "quantize_int8", "dequantize_int8",
+           "TransferAgent", "WeightStore"]
 
 
 @dataclass
 class TransferAgent:
-    """One per training node; serves weight pulls over the frontend NIC."""
+    """One per training node; serves weight pulls over the frontend NIC.
+    ``active_pulls`` counts in-flight CHUNK fetches (not whole pulls), so
+    ``share_gbps`` re-divides as chunk fetches start/finish."""
     id: int
     gbps: float
     active_pulls: int = 0
@@ -52,32 +43,36 @@ class TransferAgent:
         return self.gbps / max(self.active_pulls, 1)
 
 
-@dataclass
 class WeightStore:
-    """Versioned host-side snapshot registry + agent pairing."""
-    agents: List[TransferAgent]
-    version: int = 0
-    snapshot: Optional[object] = None     # real params (real backend) or None
-    _rr: int = 0
+    """Versioned host-side snapshot registry + manifest source."""
+
+    def __init__(self, agents: List[TransferAgent], *,
+                 chunkstore: Optional[ChunkStore] = None,
+                 weight_bytes: float = 0.0, sim_chunks: int = 32):
+        self.agents = agents
+        self.version = 0
+        self.snapshot = None          # real params (real backend) or None
+        self.chunkstore = chunkstore or ChunkStore()
+        self.weight_bytes = weight_bytes
+        self.sim_chunks = sim_chunks
 
     def publish(self, version: int, snapshot=None):
         self.version = version
         self.snapshot = snapshot
+        if snapshot is not None:
+            self.chunkstore.publish(version, snapshot)
 
-    def pair(self) -> TransferAgent:
-        a = self.agents[self._rr % len(self.agents)]
-        self._rr += 1
-        return a
+    def manifest(self, codec: str = "none",
+                 base_version: Optional[int] = None) -> Manifest:
+        """Manifest of the CURRENT version under ``codec`` (delta codecs
+        encode against ``base_version`` when the store still holds it)."""
+        if self.snapshot is not None:
+            return self.chunkstore.manifest(self.version, codec,
+                                            base_version)
+        return synthetic_manifest(self.version, self.weight_bytes,
+                                  self.sim_chunks, codec=codec,
+                                  base_version=base_version)
 
-
-class TransferPlan:
-    """Computes transfer duration for one pull under the bandwidth model."""
-
-    def __init__(self, weight_bytes: float, compression: str = "none"):
-        self.weight_bytes = weight_bytes
-        self.compression = compression
-
-    def duration(self, agent: TransferAgent, receiver_gbps: float) -> float:
-        bw = min(agent.share_gbps(), receiver_gbps) * 1e9 / 8.0
-        eff = self.weight_bytes * COMPRESSION_FACTOR[self.compression]
-        return eff / bw
+    def fetch_fn(self):
+        """Chunk payload fetcher for the puller (None in sim mode)."""
+        return self.chunkstore.fetch if self.snapshot is not None else None

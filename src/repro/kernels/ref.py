@@ -73,6 +73,18 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
                      jnp.zeros_like(out))
 
 
+def dequant_ref(q, scale, base=None):
+    """Oracle for the fused dequant/delta-accumulate kernel.
+
+    q: [R, C] int8; scale: [C] f32 (per last-dim channel); base: [R, C] or
+    None.  Returns f32 [R, C] = (base or 0) + q * scale.
+    """
+    out = q.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    if base is not None:
+        out = out + base.astype(jnp.float32)
+    return out
+
+
 def ssd_scan_ref(x, dt, A, B, C, *, chunk=None):
     """Sequential SSD recurrence oracle (mathematically exact, O(L) steps).
 

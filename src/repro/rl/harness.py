@@ -36,7 +36,8 @@ class RealRLHarness:
                  lr: float = 3e-4, temperature: float = 1.0,
                  max_new: int = 12, clip_eps: float = 0.2,
                  dataset: Optional[MathTaskDataset] = None,
-                 page_size: int = 16, prefill_chunk: int = 256):
+                 page_size: int = 16, prefill_chunk: int = 256,
+                 staleness_limit: Optional[int] = None):
         self.cfg = model_cfg
         self.rc = runner_cfg
         self.max_new = max_new
@@ -52,6 +53,13 @@ class RealRLHarness:
         self._n_accum = 0
         self.step_rewards: List[float] = []
         self._reward_buf: List[float] = []
+        # per-token weight-version staleness (from Request.version_spans):
+        # logged per microbatch; responses older than ``staleness_limit``
+        # versions are masked out of the loss (rollout stays in the group
+        # so GRPO advantage normalization is unchanged)
+        self.staleness_limit = staleness_limit
+        self.staleness: List[Dict] = []
+        self.n_stale_filtered = 0
 
         def loss_fn(params, batch):
             return grpo.grpo_loss(params, model_cfg, CPU_RT, batch,
@@ -67,7 +75,8 @@ class RealRLHarness:
         import dataclasses
         runner_cfg = dataclasses.replace(
             runner_cfg, snapshot_d2h_bw=perf.weight_bytes / 2.0,
-            transfer_gbps_scale=52.0)
+            transfer_gbps_scale=52.0,
+            chunk_bytes=1 << 14)   # tiny params -> still multi-chunk pulls
         self.rc = runner_cfg
         self.runner = HybridRunner(
             runner_cfg, perf, model_cfg=model_cfg,
@@ -116,6 +125,18 @@ class RealRLHarness:
             rs = rewards[idxs]
             adv[idxs] = (rs - rs.mean()) / (rs.std() + 1e-4)
         self._reward_buf.extend(rewards.tolist())
+        # weight-version staleness accounting (per-token span stamps)
+        cur = self.runner.store.version
+        stale = np.array([cur - r.min_weight_version
+                          if r.version_spans else 0 for r in reqs])
+        self.staleness.append(dict(version=cur, n=B,
+                                   max=int(stale.max(initial=0)),
+                                   mean=float(stale.mean())))
+        if self.staleness_limit is not None:
+            for i in np.nonzero(stale > self.staleness_limit)[0]:
+                mask[i] = 0.0
+                adv[i] = 0.0
+                self.n_stale_filtered += 1
         return {
             "tokens": jnp.asarray(tokens),
             "response_mask": jnp.asarray(mask),

@@ -153,6 +153,7 @@ class StepEvent:
     token: int
     logprob: float
     finished: bool
+    weight_version: int = 0     # weights that produced this token
 
 
 class InferenceEngine:
@@ -193,9 +194,20 @@ class InferenceEngine:
         self.n_shared_prompt_tokens = 0         # tokens NOT re-prefilled
 
     # ------------------------------------------------------------------ #
-    def load_weights(self, params, version: int):
+    def swap_weights(self, params, version: int):
+        """Install a new weight version between scheduler steps.
+
+        In-flight requests are NOT dropped: their KV pages stay valid (KV
+        was computed under older weights — that is the staleness the
+        version stamps expose) and decoding continues under the new params
+        from the next ``step()``.  Tokens emitted after the swap carry
+        ``weight_version == version`` in their StepEvents.
+        """
         self.params = params
         self.weight_version = version
+
+    def load_weights(self, params, version: int):
+        self.swap_weights(params, version)
 
     @property
     def n_active(self) -> int:
@@ -356,7 +368,8 @@ class InferenceEngine:
             self.tokens_buf[i] = t
             done = (t == EOS) or (len(st.tokens) >= st.max_total)
             events.append(StepEvent(req_id=st.req_id, token=t,
-                                    logprob=float(lps[i]), finished=done))
+                                    logprob=float(lps[i]), finished=done,
+                                    weight_version=self.weight_version))
             if done:
                 self._free_slot(i)
         return events
@@ -441,7 +454,8 @@ class InferenceEngine:
                     pos_fix.append((slot, L))
                 done = (nxt == EOS) or (len(st.tokens) >= st.max_total)
                 events.append(StepEvent(req_id=req_id, token=nxt,
-                                        logprob=float(lp), finished=done))
+                                        logprob=float(lp), finished=done,
+                                        weight_version=self.weight_version))
                 if done:
                     self._free_slot(slot)
         if pos_fix:

@@ -1,0 +1,23 @@
+"""The weight-transfer plane (paper §4.3, technique 2, built out for real).
+
+``chunkstore``  — versioned manifests over content-addressed, checksummed
+                  fixed-size chunks of an encoded param pytree (+ synthetic
+                  manifests that give the analytic sim backend the exact
+                  same chunk-level pull behavior);
+``codec``       — per-leaf transfer codecs (none / int8 / delta-int8) with
+                  real quantize/encode/decode math;
+``puller``      — the chunk-level multi-peer pull scheduler on the event
+                  loop: per-chunk bandwidth shares, preemption resume from
+                  a local chunk cache, in-flight upgrade to newer versions.
+"""
+
+from repro.transfer.chunkstore import (ChunkIntegrityError, ChunkMeta,
+                                       ChunkStore, Manifest,
+                                       synthetic_manifest)
+from repro.transfer.codec import (COMPRESSION_FACTOR, dequantize_int8,
+                                  quantize_int8)
+from repro.transfer.puller import ChunkPull
+
+__all__ = ["ChunkIntegrityError", "ChunkMeta", "ChunkStore", "Manifest",
+           "synthetic_manifest", "COMPRESSION_FACTOR", "dequantize_int8",
+           "quantize_int8", "ChunkPull"]

@@ -104,3 +104,18 @@ def test_trace_synthesis_matches_stats():
         avg = tr.average_capacity(ev)
         assert abs(avg - st["avg"]) < 2.5, (name, avg)
         assert sum(1 for e in ev if e.delta < 0) >= st["preempts"] - 2
+
+
+def test_multinode_preemption_evicts_all_excess():
+    """Regression: one trace event reclaiming SEVERAL instances at once
+    (delta < -1) must evict down to capacity, not a single victim."""
+    rc = RunnerConfig(mode="disagg", n_prompts=16, group_size=4,
+                      mean_response=2000, max_response=8192, m_b=16,
+                      disagg_instances=4, seed=7)
+    r = HybridRunner(rc, PERF, model_cfg=CFG_M)
+    r.load_trace(tr.step_trace([(0.0, 4), (30.0, -3)]))
+    probes = []
+    r.loop.at(30.5, lambda: probes.append(r.manager.n_remote()))
+    r.run(n_steps=1)
+    assert r.manager.n_preemptions >= 3
+    assert probes == [1]

@@ -171,3 +171,23 @@ def test_model_attention_pallas_path():
     b = forward(params, cfg, rt_p, tokens=toks, mode="train")["hidden"]
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("R,C,with_base,block_rows", [
+    (8, 16, False, 8),        # tiny leaf, no base (full int8 pull)
+    (100, 37, True, 32),      # ragged rows, delta-accumulate
+    (256, 128, True, 64),     # lane-aligned
+    (1, 5, False, 8),         # 1-D leaf viewed as a single row
+])
+def test_dequant_kernel(R, C, with_base, block_rows):
+    from repro.kernels.dequant import fused_dequant
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randint(-127, 128, (R, C)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(1e-4, 1e-2, (C,)), jnp.float32)
+    base = (jnp.asarray(rng.randn(R, C), jnp.float32)
+            if with_base else None)
+    out = fused_dequant(q, scale, base, block_rows=block_rows,
+                        interpret=True)
+    want = ref.dequant_ref(q, scale, base)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)

@@ -1,0 +1,284 @@
+"""Weight-transfer plane tests: chunked manifests (checksums, bit-exact
+reassembly), int8/delta-int8 codec error bounds on real pytrees, resumable
+multi-peer pulls with per-chunk bandwidth shares, in-flight version
+upgrades, and live engine hot-swap with per-token version stamps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.events import EventLoop
+from repro.core.weight_transfer import TransferAgent
+from repro.transfer.chunkstore import (ChunkIntegrityError, ChunkStore,
+                                       flatten_params, synthetic_manifest)
+from repro.transfer.puller import ChunkPull
+
+
+def tiny_params(seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "wte": jax.random.normal(k[0], (37, 16), jnp.float32),
+        "blocks": [{"w1": jax.random.normal(k[1], (16, 64), jnp.float32),
+                    "b1": jax.random.normal(k[2], (64,), jnp.float32)}],
+        "head": jax.random.normal(k[3], (16, 37), jnp.float32),
+    }
+
+
+def _pull_all(store, manifest):
+    return {c.digest: store.fetch(c.digest) for c in manifest.chunks}
+
+
+def _assert_quant_bound(dec, want, basis):
+    """Per-channel int8 bound: |dec - want| <= scale/2, scale from basis
+    (the array that was quantized: the leaf itself, or the delta).
+    Matches the codec's channel view: [rows, last_dim] for >=2-D leaves,
+    a [n, 1] column with one global scale for 1-D leaves."""
+    b = np.asarray(basis, np.float32)
+    rows = b.reshape(-1, b.shape[-1]) if b.ndim > 1 else b.reshape(-1, 1)
+    scale = np.abs(rows).max(axis=0) / 127.0 + 1e-12
+    err = np.abs(np.asarray(dec, np.float32)
+                 - np.asarray(want, np.float32)).reshape(rows.shape)
+    assert (err <= 0.5 * scale[None, :] + 1e-6).all(), err.max()
+
+
+# --------------------------------------------------------------------------- #
+# chunkstore + codecs
+# --------------------------------------------------------------------------- #
+def test_manifest_roundtrip_bitexact_and_checksummed():
+    store = ChunkStore(chunk_bytes=1024)
+    p = tiny_params()
+    store.publish(1, p)
+    m = store.manifest(1, "none")
+    assert m.n_chunks > 3 and m.total_bytes == store.raw_bytes(1)
+    chunks = _pull_all(store, m)
+    out = store.assemble(m, chunks, like=p)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a corrupted chunk must fail its checksum
+    bad = dict(chunks)
+    d0 = m.chunks[0].digest
+    bad[d0] = bytes(m.chunks[0].nbytes)
+    with pytest.raises(ChunkIntegrityError):
+        store.assemble(m, bad, like=p)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_int8_codec_error_bounds(use_pallas):
+    store = ChunkStore(chunk_bytes=1024)
+    p = tiny_params()
+    store.publish(1, p)
+    m = store.manifest(1, "int8")
+    assert m.total_bytes < store.raw_bytes(1) * 0.6      # ~2x compression
+    out = store.assemble(m, _pull_all(store, m), like=p,
+                         use_pallas=use_pallas)
+    flat_o, flat_p = flatten_params(out), flatten_params(p)
+    for key in flat_p:
+        _assert_quant_bound(flat_o[key], flat_p[key], flat_p[key])
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_delta_int8_codec_error_bounds(use_pallas):
+    store = ChunkStore(chunk_bytes=1024)
+    p1 = tiny_params()
+    p2 = jax.tree.map(
+        lambda x: x + 0.01 * jax.random.normal(jax.random.PRNGKey(9),
+                                               x.shape), p1)
+    store.publish(1, p1)
+    store.publish(2, p2)
+    m = store.manifest(2, "delta-int8", base_version=1)
+    assert m.codec == "delta-int8" and m.base_version == 1
+    out = store.assemble(m, _pull_all(store, m), like=p1, base_params=p1,
+                         use_pallas=use_pallas)
+    flat_o, flat_1, flat_2 = (flatten_params(out), flatten_params(p1),
+                              flatten_params(p2))
+    for key in flat_2:
+        # per-hop bound: receiver holds the exact base, so the error is
+        # just the quantization error of the DELTA (tiny scales)
+        _assert_quant_bound(flat_o[key], flat_2[key],
+                            flat_2[key] - flat_1[key])
+    # cold/expired base falls back to a full int8 manifest
+    assert store.manifest(2, "delta-int8", base_version=99).codec == "int8"
+    assert store.manifest(2, "delta-int8").codec == "int8"
+
+
+# --------------------------------------------------------------------------- #
+# puller: resume, bandwidth shares, upgrade, multi-peer
+# --------------------------------------------------------------------------- #
+def test_preempted_pull_resumes_missing_chunks_only():
+    store = ChunkStore(chunk_bytes=1024)
+    p = tiny_params()
+    store.publish(1, p)
+    m = store.manifest(1, "none")
+    n = m.n_chunks
+    loop = EventLoop()
+    agents = [TransferAgent(0, 8.0)]                 # 1 GB/s sender
+    cache, done = {}, []
+    # wire_scale stretches 1 KiB chunks to ~1 s fetches on the event clock
+    kw = dict(receiver_gbps=1e4, cache=cache, fetch_fn=store.fetch,
+              fanout=1, wire_scale=1e6, on_complete=done.append)
+    pull1 = ChunkPull(loop, agents, m, **kw).start()
+    loop.run(until=(n // 2) * 1.024 + 0.01)          # ~half the chunks
+    pull1.cancel()                                   # preemption mid-pull
+    got = len(cache)
+    assert 0 < got < n and not done
+    pull2 = ChunkPull(loop, agents, m, **kw).start() # restart, warm cache
+    loop.run()
+    assert done and done[0] is pull2
+    assert pull2.n_cache_hits == got
+    assert pull2.n_fetched == n - got                # ONLY missing chunks
+    assert pull1.n_fetched + pull2.n_fetched == n
+    assert agents[0].active_pulls == 0
+    # reassembly after preempt/resume is still bit-identical
+    out = store.assemble(m, cache, like=p)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _timed_pulls(start_times, n_chunks=16, gbps=8.0):
+    """Start one pull per entry of start_times against ONE 8 gbps agent;
+    returns {pull_index: finish_time}.  16 chunks of 0.5 GB => solo 8 s."""
+    loop = EventLoop()
+    agents = [TransferAgent(0, gbps)]
+    m = synthetic_manifest(1, 8e9, n_chunks)
+    finished = {}
+
+    def launch(j):
+        ChunkPull(loop, agents, m, receiver_gbps=1e4, cache={}, fanout=1,
+                  on_complete=lambda p, j=j:
+                  finished.__setitem__(j, loop.now)).start()
+    for j, t0 in enumerate(start_times):
+        loop.at(t0, lambda j=j: launch(j))
+    loop.run()
+    return finished
+
+
+def test_joining_pull_slows_earlier_pull_per_chunk():
+    """Regression for the stale-bandwidth bug: a pull that began alone must
+    NOT keep full bandwidth after a second pull joins — its remaining
+    chunks see the halved share, so it finishes later than solo."""
+    solo = _timed_pulls([0.0])[0]
+    both = _timed_pulls([0.0, 0.0])
+    late = _timed_pulls([0.0, solo / 2])
+    assert abs(solo - 8.0) < 0.5
+    # simultaneous pulls each get half the agent: ~2x solo
+    assert both[0] > 1.8 * solo and both[1] > 1.8 * solo
+    # the EARLY pull is slowed by the late joiner (old model: == solo)
+    assert late[0] > 1.3 * solo, (late, solo)
+    assert late[1] > late[0] - solo / 2
+
+
+def test_multi_peer_fanout_speeds_cold_provision():
+    def cold(n_agents, fanout):
+        loop = EventLoop()
+        agents = [TransferAgent(i, 8.0) for i in range(n_agents)]
+        m = synthetic_manifest(1, 8e9, 16)
+        t = []
+        ChunkPull(loop, agents, m, receiver_gbps=1e4, cache={},
+                  fanout=fanout,
+                  on_complete=lambda p: t.append(loop.now)).start()
+        loop.run()
+        return t[0]
+    assert cold(2, 2) < 0.6 * cold(1, 1)
+
+
+def test_upgrade_in_flight_refetches_only_invalidated_chunks():
+    store = ChunkStore(chunk_bytes=512)
+    p1 = tiny_params()
+    store.publish(1, p1)
+    p2 = dict(p1)
+    p2["head"] = p1["head"] + 1.0                    # ONE leaf changes
+    store.publish(2, p2)
+    m1, m2 = store.manifest(1), store.manifest(2)
+    shared = set(m1.digests()) & set(m2.digests())
+    assert shared and set(m2.digests()) - set(m1.digests())
+    loop = EventLoop()
+    agents = [TransferAgent(0, 8.0)]
+    cache, done = {}, []
+    pull = ChunkPull(loop, agents, m1, receiver_gbps=1e4, cache=cache,
+                     fetch_fn=store.fetch, fanout=1, wire_scale=1e6,
+                     on_complete=done.append).start()
+    loop.run(until=2.1)                              # a couple of chunks in
+    assert not done
+    pull.retarget(m2)                                # v2 published mid-pull
+    loop.run()
+    assert done
+    # content addressing: nothing fetched twice, shared chunks kept
+    assert pull.n_fetched == len(cache)
+    assert pull.n_fetched < m1.n_chunks + m2.n_chunks
+    assert set(m2.digests()) <= set(cache)
+    out = store.assemble(m2, cache, like=p1)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# runtime integration (sim backend through the same puller)
+# --------------------------------------------------------------------------- #
+def test_sim_runtime_pulls_chunks_and_stamps_versions():
+    from repro.configs import get_config
+    from repro.core import trace as tr
+    from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+    from repro.core.perfmodel import model_perf_from_cfg
+    cfg_m = get_config("qwen3-8b")
+    rc = RunnerConfig(mode="rlboost", n_prompts=16, group_size=4,
+                      mean_response=2000, max_response=8192, m_b=16,
+                      seed=2, compression="delta-int8", transfer_chunks=8)
+    r = HybridRunner(rc, model_perf_from_cfg(cfg_m), model_cfg=cfg_m)
+    r.load_trace(tr.constant_trace(4))
+    metrics = r.run(n_steps=2)
+    assert len(metrics) == 2
+    assert r.manager.n_chunk_fetches > 0
+    for req in r._step_requests:
+        assert req.done
+        assert sum(n for _, n in req.version_spans) == req.n_generated
+        assert all(1 <= v <= r.store.version for v, _ in req.version_spans)
+
+
+# --------------------------------------------------------------------------- #
+# live engine hot-swap
+# --------------------------------------------------------------------------- #
+def test_engine_swap_weights_midstream_stamps_and_bounds():
+    from repro.configs import get_config
+    from repro.data import tokenizer as tok
+    from repro.models import init_params
+    from repro.rl.sampler import request_key
+    from repro.serving.engine import InferenceEngine
+    cfg = get_config("qwen2-7b").reduced(n_heads=2, n_kv_heads=1,
+                                         d_model=32, head_dim=16, d_ff=64,
+                                         vocab_size=tok.VOCAB_SIZE)
+    params1 = init_params(cfg, jax.random.PRNGKey(0))
+    params2 = jax.tree.map(lambda x: x * 1.01, params1)
+    # v2 travels as a delta-int8 manifest, installed via the fused kernel
+    store = ChunkStore(chunk_bytes=2048)
+    store.publish(1, params1)
+    store.publish(2, params2)
+    m = store.manifest(2, "delta-int8", base_version=1)
+    installed = store.assemble(m, _pull_all(store, m), like=params1,
+                               base_params=params1, use_pallas=True)
+    f_i, f_1, f_2 = (flatten_params(installed), flatten_params(params1),
+                     flatten_params(params2))
+    for key in f_2:    # delta-int8 install ~= full-precision install
+        _assert_quant_bound(f_i[key], f_2[key], f_2[key] - f_1[key])
+
+    eng = InferenceEngine(cfg, params1, max_batch=4, slab_len=64,
+                          temperature=1.0, weight_version=1)
+    prompt = tok.encode("12+34=")
+    versions = {0: [], 1: []}
+    finished = set()
+    for rid in versions:
+        eng.add_request(rid, prompt, request_key(0, rid),
+                        len(prompt) + 10, len(prompt))
+    for step in range(30):
+        if step == 4:       # v2 lands mid-generation: swap, don't drop
+            eng.swap_weights(installed, 2)
+        for ev in eng.step():
+            versions[ev.req_id].append(ev.weight_version)
+            if ev.finished:
+                finished.add(ev.req_id)
+        if finished == set(versions):
+            break
+    assert finished == {0, 1}                        # nothing dropped
+    for vs in versions.values():
+        assert vs == sorted(vs)                      # monotone versions
+        assert vs[0] == 1 and (vs[-1] == 2 or len(vs) <= 4)
