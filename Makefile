@@ -10,6 +10,7 @@ test:
 bench-smoke:
 	$(PY) -m benchmarks.run --quick --only kernels
 	$(PY) -m benchmarks.run --quick --only transfer_plane
+	$(PY) -m benchmarks.run --quick --only engine_horizon
 	$(PY) -m benchmarks.run --quick --only integrity
 
 ci: test bench-smoke

@@ -1,0 +1,82 @@
+"""Engine decode-horizon benchmark: tokens/s and per-token dispatch cost
+swept over the fused horizon H and the batch size.
+
+The tiny-model engine on CPU is dispatch-dominated, which is exactly the
+regime the fused horizon targets: one jitted scan per H tokens instead of
+one dispatch (+ host loop + device<->host sync) per token.  Reported
+``ms_per_token`` is wall time per generated token post-warmup; it must
+decrease monotonically with H on the quick config (the acceptance check),
+and ``ms_per_dispatch`` shows the amortized launch cost directly.
+"""
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.data import tokenizer as tok
+from repro.models import init_params
+from repro.rl.sampler import request_key
+from repro.serving.engine import InferenceEngine
+
+HORIZONS = [1, 4, 8, 16]
+
+
+def _bench_one(cfg, params, B: int, H: int, gen: int) -> dict:
+    eng = InferenceEngine(cfg, params, max_batch=B, slab_len=64,
+                          temperature=1.0, page_size=16, horizon=H)
+    prompt = tok.encode("12+34=")
+    # greedy-length budget; EOS may end rows early (counted, not assumed)
+    for i in range(B):
+        eng.add_request(i, prompt, request_key(0, i),
+                        len(prompt) + gen + 1, len(prompt))
+    eng.step()                              # prefill + compile
+    eng.step()                              # compile the fused decode
+    t0 = time.perf_counter()
+    n_tokens, n_steps = 0, 0
+    while eng.n_active:
+        n_tokens += len(eng.step())
+        n_steps += 1
+    dt = max(time.perf_counter() - t0, 1e-9)
+    return dict(batch=B, horizon=H, tokens=n_tokens, steps=n_steps,
+                wall_s=dt, tok_per_s=n_tokens / dt,
+                ms_per_token=1e3 * dt / max(n_tokens, 1),
+                ms_per_dispatch=1e3 * dt / max(n_steps, 1),
+                n_dispatches=eng.n_decode_dispatches,
+                n_state_uploads=eng.n_state_uploads,
+                n_bt_uploads=eng.n_bt_uploads)
+
+
+def main(quick: bool = True):
+    cfg = get_config("qwen2-7b").reduced(
+        n_layers=2, n_heads=4, n_kv_heads=2, d_model=64, head_dim=16,
+        d_ff=128, vocab_size=tok.VOCAB_SIZE, name="tiny-bench")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = [4] if quick else [4, 8, 16]
+    gen = 48 if quick else 192
+    rows = []
+    for B in batches:
+        per_tok = []
+        for H in HORIZONS:
+            r = _bench_one(cfg, params, B, H, gen)
+            rows.append(r)
+            per_tok.append(r["ms_per_token"])
+            emit(f"engine/tok_per_s/B{B}/H{H}", r["tok_per_s"],
+                 r["ms_per_token"], r["ms_per_dispatch"])
+        # dispatch-overhead amortization: per-token cost must fall as H
+        # rises (the horizon's whole purpose)
+        mono = all(a >= b for a, b in zip(per_tok, per_tok[1:]))
+        emit(f"engine/per_token_monotonic_decreasing/B{B}", int(mono),
+             per_tok[0] / max(per_tok[-1], 1e-12))
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench", "engine.json")
+    with open(out, "w") as f:
+        json.dump(dict(horizons=HORIZONS, rows=rows), f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

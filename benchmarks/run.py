@@ -12,11 +12,11 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_fault_handling, bench_integrity, bench_kernels,
-                        bench_motivation, bench_response_length,
-                        bench_seeding_ablation, bench_static_instances,
-                        bench_trace_throughput, bench_transfer,
-                        bench_weight_transfer, roofline)
+from benchmarks import (bench_engine, bench_fault_handling, bench_integrity,
+                        bench_kernels, bench_motivation,
+                        bench_response_length, bench_seeding_ablation,
+                        bench_static_instances, bench_trace_throughput,
+                        bench_transfer, bench_weight_transfer, roofline)
 
 BENCHES = [
     ("fig2_motivation", bench_motivation.main),
@@ -26,6 +26,7 @@ BENCHES = [
     ("fig13_response_length", bench_response_length.main),
     ("fig14_17_weight_transfer", bench_weight_transfer.main),
     ("transfer_plane", bench_transfer.main),
+    ("engine_horizon", bench_engine.main),
     ("fig15_fault_handling", bench_fault_handling.main),
     ("fig16_integrity", bench_integrity.main),
     ("kernels", bench_kernels.main),

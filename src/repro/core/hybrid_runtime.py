@@ -63,6 +63,7 @@ class RunnerConfig:
     seed: int = 0
     snapshot_d2h_bw: float = 5.0e10        # weight snapshot to host, B/s
     transfer_gbps_scale: float = 1.0       # scales DCN bw (real-harness pacing)
+    decode_horizon: int = 1                # tokens per fused decode dispatch
 
 
 class HybridRunner:
@@ -94,7 +95,8 @@ class HybridRunner:
             compression=cfg.compression, cfg=model_cfg,
             engine_factory=engine_factory,
             max_exec_per_instance=cfg.remote_max_exec, seed=cfg.seed,
-            transfer_fanout=cfg.transfer_fanout)
+            transfer_fanout=cfg.transfer_fanout,
+            decode_horizon=cfg.decode_horizon)
         self.scheduler = SeedingScheduler(
             n_resv=cfg.n_local_engines * cfg.n_reserved_nodes,
             eta=cfg.eta, t_init=cfg.t_seed_init,

@@ -26,7 +26,8 @@ class RolloutInstance:
     def __init__(self, id: int, loop: EventLoop, kind: InstanceKind,
                  perf: ModelPerf, manager, *, max_exec: int = 64,
                  local: bool = False, cfg=None, engine=None,
-                 rng_seed: int = 0, chunk_cache=None):
+                 rng_seed: int = 0, chunk_cache=None,
+                 horizon: Optional[int] = None):
         self.id = id
         self.loop = loop
         self.kind = kind
@@ -37,6 +38,14 @@ class RolloutInstance:
         self.local = local                 # a seeding engine on the cluster
         self.cfg = cfg
         self.engine = engine               # real backend (InferenceEngine)
+        # decode horizon: one modeled step = one fused dispatch = up to H
+        # tokens per executing request.  The real backend is authoritative
+        # (the engine's fused loop actually emits H tokens per step()); the
+        # sim backend mirrors it so both account a step as H tokens.
+        if horizon is not None:
+            self.horizon = max(int(horizon), 1)
+        else:
+            self.horizon = engine.horizon if engine is not None else 1
         self.alive = True
         self.weight_version = -1
         # local chunk cache (digest -> payload): survives preempt/restart
@@ -158,8 +167,9 @@ class RolloutInstance:
     def _step_time(self) -> float:
         n = max(len(self.executing), 1)
         ctx_lens = [r.total_len for r in self.executing.values()] or [0]
-        t = self.perf.decode_step_time(self.kind, n, 0.0, self.cfg,
-                                       ctx_lens=ctx_lens)
+        t = self.perf.decode_horizon_time(self.kind, n, 0.0, self.cfg,
+                                          ctx_lens=ctx_lens,
+                                          horizon=self.horizon)
         if self._pending_prefill_tokens:
             t += self.perf.prefill_time(self.kind, self._pending_prefill_tokens)
             self._pending_prefill_tokens = 0
@@ -196,15 +206,21 @@ class RolloutInstance:
                 if r is not None:
                     self._emit(r, e)
         else:
-            for r in list(self.executing.values()):
-                r.stamp_version(self.weight_version)
-                r.n_generated += 1
-                self.tokens_out += 1
-                self.manager.on_token(r, self)
-                if r.total_len >= min(r.target_total or r.max_total,
-                                      r.max_total):
-                    self.executing.pop(r.id, None)
-                    self.manager.on_complete(r, self)
+            # the modeled fused horizon: up to H tokens per request per
+            # dispatch, emitted token-by-token (collection granularity and
+            # early-finish behavior stay aligned with the real engine)
+            for _ in range(self.horizon):
+                if not self.executing:
+                    break
+                for r in list(self.executing.values()):
+                    r.stamp_version(self.weight_version)
+                    r.n_generated += 1
+                    self.tokens_out += 1
+                    self.manager.on_token(r, self)
+                    if r.total_len >= min(r.target_total or r.max_total,
+                                          r.max_total):
+                        self.executing.pop(r.id, None)
+                        self.manager.on_complete(r, self)
         # record throughput sample for the profile table
         self.manager.lb.profile.record(n_exec, n_exec / max(dt, 1e-9))
         self._kick()

@@ -46,6 +46,10 @@ class ModelPerf:
     """Analytic per-model quantities (bf16)."""
     n_params: float           # total (weights moved / trained)
     n_active: float           # active per token (MoE)
+    # host-side cost of ONE decode dispatch (launch + per-step host loop +
+    # device->host sync).  The fused decode horizon amortizes it over H
+    # tokens; 0.0 keeps legacy per-token pacing bit-identical at H = 1.
+    dispatch_overhead_s: float = 0.0
 
     @property
     def weight_bytes(self) -> float:
@@ -81,6 +85,23 @@ class ModelPerf:
             kv = self.kv_bytes_per_token(cfg) * avg_ctx * batch
         mem = (self.weight_bytes + kv) / kind.hbm
         return max(compute, mem)
+
+    def decode_horizon_time(self, kind: InstanceKind, batch: int,
+                            avg_ctx: float, cfg=None, ctx_lens=None,
+                            horizon: int = 1) -> float:
+        """One fused decode dispatch generating ``horizon`` tokens per row.
+
+        The roofline cost accrues per token with the context GROWING inside
+        the horizon (token h reads h extra KV positions per row); the
+        per-dispatch host overhead is paid once — that amortization is the
+        whole point of the on-device scan loop.
+        """
+        t = 0.0
+        for h in range(horizon):
+            cl = [c + h for c in ctx_lens] if ctx_lens is not None else None
+            t += self.decode_step_time(kind, batch, avg_ctx + h, cfg,
+                                       ctx_lens=cl)
+        return t + self.dispatch_overhead_s
 
     def prefill_time(self, kind: InstanceKind, n_tokens: int) -> float:
         return 2.0 * self.n_active * n_tokens / (kind.flops * PREFILL_MFU)

@@ -39,7 +39,8 @@ class RolloutManager:
                  cfg=None,
                  engine_factory: Optional[Callable] = None,
                  seed: int = 0,
-                 transfer_fanout: int = 2):
+                 transfer_fanout: int = 2,
+                 decode_horizon: int = 1):
         self.loop = loop
         self.perf = perf
         self.store = store
@@ -54,6 +55,9 @@ class RolloutManager:
         self.engine_factory = engine_factory
         self.seed = seed
         self.transfer_fanout = transfer_fanout
+        # sim-backend decode horizon (tokens per fused dispatch); real
+        # engines carry their own horizon and the instance follows it
+        self.decode_horizon = max(int(decode_horizon), 1)
 
         self.instances: Dict[int, RolloutInstance] = {}
         # chunk caches of preempted instances: a restarted instance adopts
@@ -97,7 +101,8 @@ class RolloutManager:
             iid, self.loop, kind or self.spot_kind, self.perf, self,
             max_exec=max_exec or self.max_exec, local=local, cfg=self.cfg,
             engine=engine, rng_seed=self.seed * 1000 + iid,
-            chunk_cache=cache)
+            chunk_cache=cache,
+            horizon=None if engine is not None else self.decode_horizon)
         self.instances[iid] = inst
         if local:
             # seeding engines already hold the latest weights (same HBM)

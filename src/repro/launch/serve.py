@@ -25,6 +25,8 @@ def main():
     ap.add_argument("--prompts", nargs="+", default=["12+34=", "7*8="])
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="tokens per fused decode dispatch (bit-exact vs 1)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -36,7 +38,8 @@ def main():
     max_len = max(len(tok.encode(p)) for p in args.prompts) + args.max_new
     engine = InferenceEngine(cfg, params, max_batch=len(args.prompts),
                              slab_len=max(2 * max_len, 64),
-                             temperature=args.temperature)
+                             temperature=args.temperature,
+                             horizon=args.horizon)
 
     t0 = time.time()
     outs = {}

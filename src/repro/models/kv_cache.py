@@ -125,6 +125,40 @@ class PagedKVAllocator:
             return new, (page, new)
         return page, None
 
+    def reserve_decode(self, table: List[int], start: int, n: int
+                       ) -> List[Tuple[int, int]]:
+        """Reserve the decode write window [start, start + n) in one call.
+
+        Appends fresh pages until the table covers ``start + n`` positions
+        AND copy-on-writes every shared page the window overlaps, so the
+        fused multi-token decode loop can run ``n`` steps with no allocator
+        interaction (no COW, no capacity check) mid-horizon.  Atomic w.r.t.
+        :class:`OutOfPages`: the pool state is untouched when it raises, so
+        callers may grow the pool and retry.
+
+        Returns the (src, dst) page-copy pairs the caller must apply to the
+        device pools before the first write.
+        """
+        ps = self.page_size
+        need_cap = self.pages_for(start + n) - len(table)
+        lo, hi = start // ps, (start + max(n, 1) - 1) // ps
+        shared = [i for i in range(lo, min(hi + 1, len(table)))
+                  if self.ref[table[i]] > 1]
+        if need_cap + len(shared) > self.n_free:
+            raise OutOfPages(
+                f"reserve_decode needs {need_cap + len(shared)} pages, "
+                f"{self.n_free} free")
+        copies: List[Tuple[int, int]] = []
+        for i in shared:
+            page = table[i]
+            new = self.alloc(1)[0]
+            self.ref[page] -= 1
+            table[i] = new
+            copies.append((page, new))
+        if need_cap > 0:
+            table.extend(self.alloc(need_cap))
+        return copies
+
     # ------------------------------------------------------------------ #
     def grow(self, new_num_pages: int):
         assert new_num_pages > self.num_pages

@@ -88,11 +88,13 @@ class RealRLHarness:
     # ------------------------------------------------------------------ #
     def _engine_factory(self):
         # paged engine: GRPO siblings dispatched together share their prompt
-        # pages (1 prefill per group); responses may outgrow slab_len
+        # pages (1 prefill per group); responses may outgrow slab_len.
+        # decode_horizon > 1 fuses H tokens per dispatch (bit-exact vs. 1)
         return InferenceEngine(self.cfg, self.params, max_batch=8,
                                slab_len=128, temperature=self.temperature,
                                page_size=self.page_size,
-                               prefill_chunk=self.prefill_chunk)
+                               prefill_chunk=self.prefill_chunk,
+                               horizon=self.rc.decode_horizon)
 
     def _request_factory(self, rid: int, group: int) -> Request:
         sample = self.dataset.sample(group)

@@ -7,6 +7,15 @@ per-request block tables (``repro.models.kv_cache.PagedKVAllocator``);
 per-slot state (ring buffers, SSM states, sampling buffers) is bounded by
 ``max_batch`` decode slots.  The scheduler:
 
+  * decodes ``horizon`` tokens per dispatch inside ONE jitted
+    ``jax.lax.scan`` — sampling, EOS/max_total stopping, and the
+    token-feedback loop all run on device, and the host syncs once per
+    horizon instead of once per token;
+  * keeps scheduler state device-resident: the last-token / sampling-key /
+    active / max-total buffers and the block table live on device and are
+    re-uploaded only when the host mutates them (admission, completion,
+    migration, page allocation) — steady-state decode transfers nothing
+    host->device;
   * batches prefill across waiting requests in fixed token-budget chunks,
     interleaved with decode steps (one chunk per request per ``step()``;
     long prompts on all-global models are split across steps);
@@ -17,12 +26,24 @@ per-slot state (ring buffers, SSM states, sampling buffers) is bounded by
     responses may grow past any fixed slab because the pool allocates (and,
     if needed, grows) pages on demand.
 
+Horizon contract: before each fused dispatch the host reserves the whole
+write window [ctx_len, ctx_len + H) per active slot in one allocator call
+(``PagedKVAllocator.reserve_decode``: capacity + all COW copies up front),
+so no allocator interaction can interrupt the loop.  Rows that finish
+mid-horizon freeze their ``pos``, park their token buffer at
+``TOKEN_SENTINEL``, and route subsequent KV writes to the garbage page via
+the in-loop active mask.  ``swap_weights`` and migration happen between
+``step()`` calls, i.e. at horizon boundaries — ``weight_version`` is
+constant within a horizon by construction.
+
 Token-level semantics needed by RLBoost:
   * every generated token (and its behavior logprob) is emitted to the caller
     as it is produced — the rollout manager collects at token granularity;
   * ``add_request`` accepts prompt+partial tokens, so migrated requests
     continue with a single prefill (paper §4.2);
-  * sampling keys are (request, position)-addressed => migration is bit-exact.
+  * sampling keys are (request, position)-addressed => migration is bit-exact
+    (and H > 1 is bit-exact vs. H = 1 by construction: the scan body IS the
+    single-step decode computation).
 """
 
 from __future__ import annotations
@@ -35,13 +56,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.data.tokenizer import EOS
+from repro.data.tokenizer import EOS, PAD
 from repro.models import kv_cache as kvc
 from repro.models.kv_cache import GARBAGE_PAGE, OutOfPages, PagedKVAllocator
 from repro.models.transformer import (CPU_RT, forward, logits_from_hidden)
 from repro.rl.sampler import sample_token
 
 _JIT_CACHE: Dict = {}
+_JIT_STATS = {"compiles": 0, "padded_reuse": 0}
+
+# parked in the device token buffer for empty / finished rows — a finished
+# row's stale last token must never leak into a reused batch row
+TOKEN_SENTINEL = PAD
 
 
 class AdmissionError(RuntimeError):
@@ -55,13 +81,36 @@ def _bucket(n: int, minimum: int = 16) -> int:
     return b
 
 
+def jit_cache_stats() -> Dict[str, int]:
+    """Compile-churn counters (regression-tested): total closures compiled
+    and block-table-width lookups served by a wider already-compiled one."""
+    return dict(_JIT_STATS, entries=len(_JIT_CACHE))
+
+
+def _padded_width(family: Tuple, needed: int) -> Optional[int]:
+    """Smallest already-compiled block-table width >= ``needed`` for this
+    closure family.  Block tables pad with the garbage page, so any wider
+    compiled closure computes the identical result — reusing it avoids
+    compiling every power-of-two width as requests grow and shrink."""
+    best = None
+    for k in _JIT_CACHE:
+        if k[:-1] == family and k[-1] >= needed:
+            if best is None or k[-1] < best:
+                best = k[-1]
+    return best
+
+
 # --------------------------------------------------------------------------- #
 # jitted stages (cache keyed on the temperature VALUE — two engines with
 # different positive temperatures must not share compiled closures)
 # --------------------------------------------------------------------------- #
+def _prefill_family(cfg: ModelConfig, n: int, C: int) -> Tuple:
+    return ("prefill", cfg.name, cfg.d_model, n, C)
+
+
 def _get_prefill_fn(cfg: ModelConfig, n: int, C: int, nb: int):
     """Batched chunk prefill: n rows of C tokens against paged prefixes."""
-    key = ("prefill", cfg.name, cfg.d_model, n, C, nb)
+    key = _prefill_family(cfg, n, C) + (nb,)
     if key not in _JIT_CACHE:
         def fn(params, cache, slot_idx, tokens, mask, offsets, bt):
             rows = kvc.gather_rows(cache, slot_idx)
@@ -75,41 +124,80 @@ def _get_prefill_fn(cfg: ModelConfig, n: int, C: int, nb: int):
                 out["hidden"], last[:, None, None], axis=1)[:, 0]
             logits = logits_from_hidden(params, cfg, hidden_last)  # [n, V]
             return cache, logits
+        _JIT_STATS["compiles"] += 1
         _JIT_CACHE[key] = jax.jit(fn, donate_argnums=(1,))
     return _JIT_CACHE[key]
 
 
-def _get_decode_fn(cfg: ModelConfig, nb: int, temperature: float):
-    key = ("decode", cfg.name, cfg.d_model, nb, temperature)
+def _decode_family(cfg: ModelConfig, temperature: float,
+                   horizon: int) -> Tuple:
+    return ("decode", cfg.name, cfg.d_model, temperature, horizon)
+
+
+def _get_decode_fn(cfg: ModelConfig, nb: int, temperature: float,
+                   horizon: int):
+    """Fused decode horizon: ``horizon`` tokens per dispatch in one scan.
+
+    Carry = (cache, last_tokens [B], active [B]).  Each step is exactly the
+    single-step decode computation (forward, logits, (request, position)-
+    keyed sampling, logprob), so H > 1 is bit-exact vs. H = 1.  Rows that
+    hit EOS or max_total drop out of the active mask: their ``pos``
+    freezes, their block-table row is masked to the garbage page (all
+    subsequent KV writes land there), and their carried token parks at
+    ``TOKEN_SENTINEL``.  Outputs are [B, H] token / logprob matrices plus
+    the [B, H] emission mask (row was active at that step).
+    """
+    key = _decode_family(cfg, temperature, horizon) + (nb,)
     if key not in _JIT_CACHE:
-        def fn(params, cache, tokens, rkeys, active, bt):
-            old_pos = cache["pos"]
-            out = forward(params, cfg, CPU_RT, tokens=tokens, cache=cache,
-                          mode="decode", paged={"block_tables": bt})
-            logits = logits_from_hidden(params, cfg, out["hidden"][:, 0])
-            t = temperature if temperature > 0 else 1.0
-            nxt = sample_token(logits, rkeys, old_pos, temperature)
-            lse = jax.nn.logsumexp(logits / t, axis=-1)
-            lp = jnp.take_along_axis(
-                logits / t, nxt[:, None], axis=-1)[:, 0] - lse
-            cache = out["cache"]
-            cache["pos"] = jnp.where(active, cache["pos"], old_pos)
-            return cache, nxt, lp
-        _JIT_CACHE[key] = jax.jit(fn, donate_argnums=(1,))
+        t = temperature if temperature > 0 else 1.0
+
+        def fn(params, cache, tokens, rkeys, active, max_total, bt):
+            def body(carry, _):
+                cache, tokens, active = carry
+                old_pos = cache["pos"]
+                bt_step = jnp.where(active[:, None], bt,
+                                    jnp.int32(GARBAGE_PAGE))
+                out = forward(params, cfg, CPU_RT, tokens=tokens,
+                              cache=cache, mode="decode",
+                              paged={"block_tables": bt_step})
+                logits = logits_from_hidden(params, cfg, out["hidden"][:, 0])
+                nxt = sample_token(logits, rkeys, old_pos, temperature)
+                lse = jax.nn.logsumexp(logits / t, axis=-1)
+                lp = jnp.take_along_axis(
+                    logits / t, nxt[:, None], axis=-1)[:, 0] - lse
+                cache = out["cache"]
+                cache["pos"] = jnp.where(active, cache["pos"], old_pos)
+                # host-side done condition, verbatim: after appending this
+                # token the request holds old_pos + 2 tokens (old_pos KV'd
+                # + the input token + this sample)
+                done = (nxt == EOS) | (old_pos + 2 >= max_total)
+                new_active = active & ~done
+                new_tokens = jnp.where(new_active, nxt,
+                                       jnp.int32(TOKEN_SENTINEL))
+                return (cache, new_tokens, new_active), (nxt, lp, active)
+
+            (cache, tokens, active), (toks, lps, em) = jax.lax.scan(
+                body, (cache, tokens, active), None, length=horizon)
+            return cache, tokens, active, toks.T, lps.T, em.T
+
+        _JIT_STATS["compiles"] += 1
+        _JIT_CACHE[key] = jax.jit(fn, donate_argnums=(1, 2, 4))
     return _JIT_CACHE[key]
 
 
-def _get_sample_fn(temperature: float):
-    """Sample one token from a single logits row at an absolute position."""
-    key = ("sample", temperature)
+def _get_batch_sample_fn(temperature: float, m: int):
+    """First-token sampling for ``m`` prefill-completed rows in ONE call
+    (was one jit dispatch per GRPO group member)."""
+    key = ("sample", temperature, m)
     if key not in _JIT_CACHE:
         def fn(logits, key_data, pos):
             t = temperature if temperature > 0 else 1.0
-            lse = jax.nn.logsumexp(logits / t)
-            nxt = sample_token(logits[None], key_data[None], pos[None],
-                               temperature)[0]
-            lp = (logits[nxt] / t) - lse
+            nxt = sample_token(logits, key_data, pos, temperature)
+            lse = jax.nn.logsumexp(logits / t, axis=-1)
+            lp = jnp.take_along_axis(
+                logits / t, nxt[:, None], axis=-1)[:, 0] - lse
             return nxt, lp
+        _JIT_STATS["compiles"] += 1
         _JIT_CACHE[key] = jax.jit(fn)
     return _JIT_CACHE[key]
 
@@ -119,6 +207,7 @@ def _get_copy_fn(cfg: ModelConfig, m: int):
     if key not in _JIT_CACHE:
         def fn(cache, src, dst):
             return kvc.copy_pool_pages(cache, src, dst)
+        _JIT_STATS["compiles"] += 1
         _JIT_CACHE[key] = jax.jit(fn, donate_argnums=(0,))
     return _JIT_CACHE[key]
 
@@ -160,11 +249,17 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  slab_len: int = 256, temperature: float = 1.0,
                  weight_version: int = 0, page_size: int = 16,
-                 prefill_chunk: int = 256, max_context: Optional[int] = None):
+                 prefill_chunk: int = 256, max_context: Optional[int] = None,
+                 horizon: int = 1):
         """``slab_len`` sizes the initial pool (max_batch * slab_len tokens)
         and the local-attention ring width; unlike the old dense slab it is
         NOT a hard length cap — pages are allocated (and the pool grown) on
-        demand, bounded only by ``max_context`` when set."""
+        demand, bounded only by ``max_context`` when set.
+
+        ``horizon`` is the number of tokens one ``step()`` decodes per
+        active request inside a single fused dispatch (H = 1 reproduces
+        per-token stepping bit-exactly; larger H amortizes the per-dispatch
+        host<->device cost over H tokens)."""
         self.cfg = cfg
         self.params = params
         self.weight_version = weight_version
@@ -174,6 +269,7 @@ class InferenceEngine:
         self.prefill_chunk = prefill_chunk
         self.temperature = temperature
         self.max_context = max_context
+        self.horizon = max(int(horizon), 1)
         mixers = cfg.layer_mixers()
         # chunked (multi-step) prompt prefill needs stateless-across-chunks
         # layers; models with SSM/ring state prefill each context in one chunk
@@ -186,16 +282,33 @@ class InferenceEngine:
         self.slots: List[Optional[SlotState]] = [None] * max_batch
         self._reserved: Dict[int, int] = {}     # req_id -> slot (waiting)
         self.waiting: List[_WaitRow] = []
-        self.tokens_buf = np.zeros((max_batch,), np.int32)
+        # host mirrors of the device-resident decode state (authoritative
+        # only while ``_state_dirty``; re-uploaded once, then the fused
+        # loop's carried outputs ARE the state)
+        self.tokens_buf = np.full((max_batch,), TOKEN_SENTINEL, np.int32)
         self.keys_buf = np.zeros((max_batch, 2), np.uint32)
-        # perf counters (prefix-sharing / dedup visibility)
+        self.maxtot_buf = np.zeros((max_batch,), np.int32)
+        self._dev_tokens = None
+        self._dev_keys = None
+        self._dev_active = None
+        self._dev_maxtot = None
+        self._state_dirty = True
+        self._bt_dev = None                     # cached device block table
+        self._bt_width = 0
+        self._bt_dirty = True
+        # perf counters (prefix-sharing / dedup / transfer visibility)
         self.n_prefills = 0                     # context prefills (rows)
         self.n_prefill_tokens = 0
         self.n_shared_prompt_tokens = 0         # tokens NOT re-prefilled
+        self.n_decode_dispatches = 0            # fused horizon launches
+        self.n_state_uploads = 0                # host->device state syncs
+        self.n_bt_uploads = 0                   # host->device block tables
 
     # ------------------------------------------------------------------ #
     def swap_weights(self, params, version: int):
-        """Install a new weight version between scheduler steps.
+        """Install a new weight version between scheduler steps (i.e. at a
+        horizon boundary — never inside a fused decode dispatch, so every
+        token of a horizon carries the same ``weight_version``).
 
         In-flight requests are NOT dropped: their KV pages stay valid (KV
         was computed under older weights — that is the staleness the
@@ -243,20 +356,22 @@ class InferenceEngine:
             except OutOfPages:
                 self._grow_pool()
 
-    def _ensure_capacity(self, table: List[int], n_tokens: int):
+    def _reserve_decode(self, table: List[int], start: int, n: int
+                        ) -> List[Tuple[int, int]]:
+        """Pre-reserve the horizon write window [start, start + n): all
+        capacity and COW copies happen HERE, before the fused dispatch
+        (``reserve_decode`` is atomic, so growing the pool and retrying
+        never loses copies)."""
+        n0 = len(table)
         while True:
             try:
-                self.alloc.ensure_capacity(table, n_tokens)
-                return
+                copies = self.alloc.reserve_decode(table, start, n)
+                break
             except OutOfPages:
                 self._grow_pool()
-
-    def _writable_page(self, table: List[int], pos: int):
-        while True:
-            try:
-                return self.alloc.writable_page(table, pos)
-            except OutOfPages:
-                self._grow_pool()
+        if copies or len(table) != n0:
+            self._bt_dirty = True
+        return copies
 
     def _grow_pool(self):
         new_num = 2 * self.alloc.num_pages
@@ -268,6 +383,8 @@ class InferenceEngine:
         if st is not None and st.table:
             self.alloc.free_table(st.table)
         self.slots[slot] = None
+        self.tokens_buf[slot] = TOKEN_SENTINEL
+        self.maxtot_buf[slot] = 0
 
     def _reserve_slot(self, req_id: int) -> int:
         taken = set(self._reserved.values())
@@ -327,20 +444,57 @@ class InferenceEngine:
         events.extend(self._prefill_phase())
         return events
 
+    # ---------------- device-resident state ---------------- #
+    def _sync_device_state(self):
+        """Upload the decode-state buffers iff the host mutated them since
+        the last dispatch (admission / migration / drop).  Rows finishing
+        inside a horizon need NO re-upload: the device transitions them
+        itself and the host mirrors track it."""
+        if self._state_dirty or self._dev_tokens is None:
+            active = np.array([s is not None for s in self.slots])
+            self._dev_tokens = jnp.asarray(self.tokens_buf)
+            self._dev_keys = jnp.asarray(self.keys_buf)
+            self._dev_active = jnp.asarray(active)
+            self._dev_maxtot = jnp.asarray(self.maxtot_buf)
+            self._state_dirty = False
+            self.n_state_uploads += 1
+
+    def _device_block_tables(self):
+        """Cached device block table, rebuilt only when some table changed
+        (admission, COW, page append, free, migration).  The width is the
+        smallest already-compiled closure width that fits (pad up) so width
+        jitter from requests growing/finishing doesn't recompile."""
+        needed = max((len(s.table) for s in self.slots if s is not None),
+                     default=1)
+        if self._bt_dirty or self._bt_dev is None or self._bt_width < needed:
+            family = _decode_family(self.cfg, self.temperature, self.horizon)
+            nb = _padded_width(family, needed)
+            if nb is None:
+                nb = _bucket(needed, minimum=4)
+            else:
+                _JIT_STATS["padded_reuse"] += 1
+            bt = np.full((self.max_batch, nb), GARBAGE_PAGE, np.int32)
+            for i, st in enumerate(self.slots):
+                if st is not None:
+                    bt[i, :len(st.table)] = st.table
+            self._bt_dev = jnp.asarray(bt)
+            self._bt_width = nb
+            self._bt_dirty = False
+            self.n_bt_uploads += 1
+        return self._bt_dev
+
     # ---------------- decode ---------------- #
     def _decode_phase(self) -> List[StepEvent]:
-        active = np.array([s is not None for s in self.slots])
-        if not active.any():
+        if self.n_active == 0:
             return []
-        # host-side page bookkeeping: capacity + copy-on-write
+        H = self.horizon
+        # host-side page bookkeeping, ONCE per horizon: reserve the whole
+        # write window (capacity + COW) for every active slot up front
         copies: List[Tuple[int, int]] = []
         for st in self.slots:
             if st is None:
                 continue
-            self._ensure_capacity(st.table, st.ctx_len + 1)
-            _, cp = self._writable_page(st.table, st.ctx_len)
-            if cp is not None:
-                copies.append(cp)
+            copies.extend(self._reserve_decode(st.table, st.ctx_len, H))
         if copies:
             m = _bucket(len(copies), minimum=1)
             src = np.full((m,), GARBAGE_PAGE, np.int32)
@@ -349,39 +503,41 @@ class InferenceEngine:
             dst[:len(copies)] = [c[1] for c in copies]
             fn = _get_copy_fn(self.cfg, m)
             self.cache = fn(self.cache, jnp.asarray(src), jnp.asarray(dst))
-        bt = self._block_tables()
-        fn = _get_decode_fn(self.cfg, bt.shape[1], self.temperature)
-        self.cache, nxt, lps = fn(self.params, self.cache,
-                                  jnp.asarray(self.tokens_buf),
-                                  jnp.asarray(self.keys_buf),
-                                  jnp.asarray(active), jnp.asarray(bt))
-        nxt = np.asarray(nxt)
+        bt = self._device_block_tables()
+        self._sync_device_state()
+        fn = _get_decode_fn(self.cfg, bt.shape[1], self.temperature, H)
+        (self.cache, self._dev_tokens, self._dev_active,
+         toks, lps, em) = fn(self.params, self.cache, self._dev_tokens,
+                             self._dev_keys, self._dev_active,
+                             self._dev_maxtot, bt)
+        self.n_decode_dispatches += 1
+        # ONE device->host sync per horizon: unpack [B, H] matrices into the
+        # per-token StepEvent stream the rollout manager consumes
+        toks = np.asarray(toks)
         lps = np.asarray(lps)
-        events = []
-        for i, st in enumerate(self.slots):
-            if st is None:
-                continue
-            t = int(nxt[i])
-            st.tokens.append(t)
-            st.last_token = t
-            st.ctx_len += 1
-            self.tokens_buf[i] = t
-            done = (t == EOS) or (len(st.tokens) >= st.max_total)
-            events.append(StepEvent(req_id=st.req_id, token=t,
-                                    logprob=float(lps[i]), finished=done,
-                                    weight_version=self.weight_version))
-            if done:
-                self._free_slot(i)
+        em = np.asarray(em)
+        events: List[StepEvent] = []
+        for h in range(H):
+            for i, st in enumerate(self.slots):
+                if st is None or not em[i, h]:
+                    continue
+                t = int(toks[i, h])
+                st.tokens.append(t)
+                st.last_token = t
+                st.ctx_len += 1
+                self.tokens_buf[i] = t
+                done = (t == EOS) or (len(st.tokens) >= st.max_total)
+                events.append(StepEvent(req_id=st.req_id, token=t,
+                                        logprob=float(lps[i, h]),
+                                        finished=done,
+                                        weight_version=self.weight_version))
+                if done:
+                    # mirrors the device transition (active->False, token
+                    # parked at the sentinel), so no state re-upload is
+                    # needed; the freed pages stay masked by the active
+                    # mask until any table changes and the bt rebuilds
+                    self._free_slot(i)
         return events
-
-    def _block_tables(self) -> np.ndarray:
-        widths = [len(s.table) for s in self.slots if s is not None]
-        nb = _bucket(max(widths + [1]), minimum=4)
-        bt = np.full((self.max_batch, nb), GARBAGE_PAGE, np.int32)
-        for i, st in enumerate(self.slots):
-            if st is not None:
-                bt[i, :len(st.table)] = st.table
-        return bt
 
     # ---------------- prefill ---------------- #
     def _prefill_phase(self) -> List[StepEvent]:
@@ -404,7 +560,12 @@ class InferenceEngine:
         offsets = np.zeros((n,), np.int32)
         slot_idx = np.full((n,), self.max_batch, np.int32)  # OOB => dropped
         widths = [len(row.table) for row, _, _ in chosen]
-        nb = _bucket(max(widths), minimum=4)
+        needed = max(widths)
+        nb = _padded_width(_prefill_family(self.cfg, n, C), needed)
+        if nb is None:
+            nb = _bucket(needed, minimum=4)
+        else:
+            _JIT_STATS["padded_reuse"] += 1
         bt = np.full((n, nb), GARBAGE_PAGE, np.int32)
         for i, (row, start, take) in enumerate(chosen):
             toks[i, :take] = row.token_ids[start:start + take]
@@ -420,8 +581,7 @@ class InferenceEngine:
         logits = np.asarray(logits)
 
         events: List[StepEvent] = []
-        sample = _get_sample_fn(self.temperature)
-        pos_fix: List[Tuple[int, int]] = []     # sibling slots need pos = L
+        completed: List[Tuple[int, _WaitRow]] = []
         for i, (row, start, take) in enumerate(chosen):
             row.done += take
             self.n_prefill_tokens += take
@@ -429,8 +589,35 @@ class InferenceEngine:
                 continue                         # more chunks to go
             self.waiting.remove(row)
             self.n_prefills += 1
+            completed.append((i, row))
+        if not completed:
+            return events
+
+        # ONE batched first-token sampling call over every member of every
+        # completed row (was one jit dispatch per GRPO group member)
+        M = sum(len(row.members) for _, row in completed)
+        m = _bucket(M, minimum=1)
+        sel = np.zeros((m,), np.int32)
+        keys = np.zeros((m, 2), np.uint32)
+        pos = np.zeros((m,), np.int32)
+        e = 0
+        for i, row in completed:
             L = len(row.token_ids)
-            lrow = jnp.asarray(logits[i])
+            for (_, key_data, _, _, _) in row.members:
+                sel[e] = i
+                keys[e] = key_data
+                pos[e] = L - 1
+                e += 1
+        sfn = _get_batch_sample_fn(self.temperature, m)
+        nxts, first_lps = sfn(jnp.asarray(logits[sel]), jnp.asarray(keys),
+                              jnp.asarray(pos))
+        nxts = np.asarray(nxts)
+        first_lps = np.asarray(first_lps)
+
+        pos_fix: List[Tuple[int, int]] = []     # sibling slots need pos = L
+        e = 0
+        for i, row in completed:
+            L = len(row.token_ids)
             # fork every sibling table BEFORE emitting any events: the owner
             # may finish (EOS / max_total) immediately, and freeing its table
             # must not strip pages later siblings still need
@@ -439,9 +626,9 @@ class InferenceEngine:
             for j, (req_id, key_data, max_total, n_prompt, slot) in \
                     enumerate(row.members):
                 table = tables[j]
-                nxt, lp = sample(lrow, jnp.asarray(key_data),
-                                 jnp.asarray(L - 1, jnp.int32))
-                nxt = int(nxt)
+                nxt = int(nxts[e])
+                lp = float(first_lps[e])
+                e += 1
                 st = SlotState(req_id=req_id, key_data=key_data,
                                tokens=list(row.token_ids) + [nxt],
                                n_prompt=n_prompt, max_total=max_total,
@@ -450,14 +637,18 @@ class InferenceEngine:
                 self.slots[slot] = st
                 self.tokens_buf[slot] = nxt
                 self.keys_buf[slot] = key_data
+                self.maxtot_buf[slot] = max_total
                 if j > 0:
                     pos_fix.append((slot, L))
                 done = (nxt == EOS) or (len(st.tokens) >= st.max_total)
                 events.append(StepEvent(req_id=req_id, token=nxt,
-                                        logprob=float(lp), finished=done,
+                                        logprob=lp, finished=done,
                                         weight_version=self.weight_version))
                 if done:
                     self._free_slot(slot)
+        # admission mutated the decode state + tables: re-upload next decode
+        self._state_dirty = True
+        self._bt_dirty = True
         if pos_fix:
             # the prefill scatter set pos only on the owner's slot row;
             # group siblings share the same context length
@@ -468,11 +659,14 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------ #
     def drop_request(self, req_id: int) -> Optional[List[int]]:
-        """Remove a request (migration away); returns its token history."""
+        """Remove a request (migration away); returns its token history.
+        Legal only between ``step()`` calls — i.e. at horizon boundaries."""
         for i, st in enumerate(self.slots):
             if st is not None and st.req_id == req_id:
                 toks = list(st.tokens)
                 self._free_slot(i)
+                self._state_dirty = True
+                self._bt_dirty = True
                 return toks
         for row in self.waiting:
             for m in row.members:
