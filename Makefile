@@ -1,16 +1,36 @@
-# Single CI entry point: tier-1 tests + a benchmark smoke run so perf
-# regressions in the paged serving path are caught per-PR.
-PY := PYTHONPATH=src python
+# Single CI entry point: tier-1 tests + a benchmark smoke run + the perf
+# regression gate, so perf regressions in the paged serving path, the
+# transfer plane, and the KV-migration path are caught per-PR.
+# NOTE: append (not clobber) any pre-existing PYTHONPATH — same form as
+# the ROADMAP tier-1 command.  The $$ escapes are load-bearing: with a
+# single $, MAKE expands the ${...} (to empty) before the shell ever
+# sees it, silently dropping the user's PYTHONPATH.
+PY := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test bench-smoke ci
+.PHONY: test lint bench-smoke bench-migration check-regression \
+        refresh-baselines ci
 
 test:
 	$(PY) -m pytest -x -q
+
+# check only — no autofix churn in CI (config in ruff.toml)
+lint:
+	ruff check --no-fix .
 
 bench-smoke:
 	$(PY) -m benchmarks.run --quick --only kernels
 	$(PY) -m benchmarks.run --quick --only transfer_plane
 	$(PY) -m benchmarks.run --quick --only engine_horizon
+	$(PY) -m benchmarks.run --quick --only migration
 	$(PY) -m benchmarks.run --quick --only integrity
 
-ci: test bench-smoke
+bench-migration:
+	$(PY) -m benchmarks.run --quick --only migration
+
+check-regression:
+	$(PY) -m benchmarks.check_regression
+
+refresh-baselines:
+	$(PY) -m benchmarks.check_regression --update
+
+ci: test bench-smoke check-regression

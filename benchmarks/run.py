@@ -13,7 +13,7 @@ import time
 import traceback
 
 from benchmarks import (bench_engine, bench_fault_handling, bench_integrity,
-                        bench_kernels, bench_motivation,
+                        bench_kernels, bench_migration, bench_motivation,
                         bench_response_length, bench_seeding_ablation,
                         bench_static_instances, bench_trace_throughput,
                         bench_transfer, bench_weight_transfer, roofline)
@@ -27,6 +27,7 @@ BENCHES = [
     ("fig14_17_weight_transfer", bench_weight_transfer.main),
     ("transfer_plane", bench_transfer.main),
     ("engine_horizon", bench_engine.main),
+    ("migration", bench_migration.main),
     ("fig15_fault_handling", bench_fault_handling.main),
     ("fig16_integrity", bench_integrity.main),
     ("kernels", bench_kernels.main),

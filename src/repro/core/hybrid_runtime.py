@@ -56,6 +56,8 @@ class RunnerConfig:
     fault_mode: str = "migrate"
     transfer_mode: str = "pull"
     compression: str = "none"
+    migration: str = "auto"                # kv | recompute | auto (cost model)
+    kv_codec: str = "none"                 # KV-page migration codec (| int8)
     transfer_chunks: int = 32              # sim manifest chunk count
     transfer_fanout: int = 2               # concurrent chunk fetches / pull
     chunk_bytes: int = 1 << 20             # real-backend manifest chunking
@@ -96,7 +98,9 @@ class HybridRunner:
             engine_factory=engine_factory,
             max_exec_per_instance=cfg.remote_max_exec, seed=cfg.seed,
             transfer_fanout=cfg.transfer_fanout,
-            decode_horizon=cfg.decode_horizon)
+            decode_horizon=cfg.decode_horizon,
+            migration=cfg.migration, kv_codec=cfg.kv_codec,
+            kv_sim_chunks=max(cfg.transfer_chunks // 4, 1))
         self.scheduler = SeedingScheduler(
             n_resv=cfg.n_local_engines * cfg.n_reserved_nodes,
             eta=cfg.eta, t_init=cfg.t_seed_init,

@@ -18,8 +18,15 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.events import EventLoop
+from repro.core.kv_migration import KVExport
 from repro.core.perfmodel import InstanceKind, ModelPerf
 from repro.core.requests import Request, Status
+from repro.core.weight_transfer import TransferAgent
+from repro.transfer.chunkstore import (ChunkIntegrityError,
+                                       MissingChunkError, assemble_kv_state,
+                                       build_kv_manifest, synthetic_manifest)
+from repro.transfer.codec import COMPRESSION_FACTOR
+from repro.transfer.puller import ChunkPull
 
 
 class RolloutInstance:
@@ -53,8 +60,20 @@ class RolloutInstance:
         # missing chunks
         self.chunk_cache = chunk_cache if chunk_cache is not None else {}
         self.pull = None                   # active ChunkPull, if any
+        # the instance NIC as a chunk-plane sender: KV-page migrations are
+        # served from here, so concurrent migrations (and, in a fuller
+        # model, egress of any kind) share its per-chunk bandwidth
+        self.nic = TransferAgent(1_000_000 + id, kind.dcn_gbps)
         self.pending: List[Request] = []
         self.executing: Dict[int, Request] = {}
+        # KV-page migrations in flight INTO this instance: requests wait
+        # here (neither pending nor decoding) while their pages pull
+        self.importing: Dict[int, Request] = {}
+        self._imports: List[Dict] = []     # {reqs, export, pull}
+        # per-export chunk caches: siblings of one export admitted in a
+        # LATER round (room-capped leftovers) resume the pull from the
+        # chunks already here instead of re-fetching the whole manifest
+        self._kv_caches: Dict[int, Dict] = {}
         self._step_scheduled = False
         self._pending_prefill_tokens = 0
         self.busy_time = 0.0
@@ -68,7 +87,9 @@ class RolloutInstance:
         return len(self.pending)
 
     def n_executing(self) -> int:
-        return len(self.executing)
+        # requests mid-KV-import hold capacity: they decode the moment
+        # their pages land, so the balancer must see them as load
+        return len(self.executing) + len(self.importing)
 
     def accepts_work(self) -> bool:
         return (self.alive
@@ -92,6 +113,23 @@ class RolloutInstance:
         for i, r in enumerate(self.pending):
             if r.id == req_id:
                 return self.pending.pop(i)
+        r = self.importing.pop(req_id, None)
+        if r is not None:
+            # mid-import: the request leaves with its KVExport intact (the
+            # source blobs outlive this pull) and can import elsewhere;
+            # once no member still wants a pull's payload, cancel it and
+            # drop its record (a cancelled pull never fires on_complete,
+            # so nothing else would ever reap it)
+            for rec in list(self._imports):
+                if not any(x.id in self.importing for x in rec["reqs"]):
+                    rec["pull"].cancel()
+                    self._imports.remove(rec)
+                    # nothing here references the export anymore: release
+                    # its chunk cache (real payloads are full page copies)
+                    mid = rec["export"].mig_id
+                    if not any(x.kv is rec["export"] for x in self.pending):
+                        self._kv_caches.pop(mid, None)
+            return r
         r = self.executing.pop(req_id, None)
         if r is not None and self.engine is not None:
             self.engine.drop_request(req_id)
@@ -101,6 +139,12 @@ class RolloutInstance:
         """Preemption / seeding-end: all requests with partials preserved."""
         out = list(self.pending)
         self.pending.clear()
+        out.extend(self.importing.values())
+        self.importing.clear()
+        for rec in self._imports:
+            rec["pull"].cancel()
+        self._imports.clear()
+        self._kv_caches.clear()
         for r in list(self.executing.values()):
             out.append(r)
         if self.engine is not None:
@@ -112,19 +156,176 @@ class RolloutInstance:
     def preempt(self):
         self.alive = False
 
+    # ---------------- KV-page migration (source side) ---------------- #
+    def export_kv_requests(self, reqs: List[Request]):
+        """Publish the KV state of ``reqs`` on the chunk plane (sets
+        ``r.kv``).  One :class:`KVExport` per GRPO group, so co-migrating
+        siblings ship their shared prompt pages once.  Requests whose
+        state is not exportable (still prefilling on the real engine, or
+        no modelable KV in sim) are left to token-history migration."""
+        mgr = self.manager
+        if mgr.migration == "recompute":
+            return
+        by_group: Dict[int, List[Request]] = {}
+        for r in reqs:
+            by_group.setdefault(r.group, []).append(r)
+        for grp in by_group.values():
+            export = self._export_group(grp)
+            if export is not None:
+                for r in grp:
+                    if r.id in export.req_ids:
+                        r.kv = export
+
+    def _export_group(self, grp: List[Request]) -> Optional[KVExport]:
+        mgr = self.manager
+        codec = mgr.kv_codec
+        factor = COMPRESSION_FACTOR.get(codec, 1.0)
+        if self.engine is not None:
+            exportable = set(self.engine.exportable_request_ids())
+            ids = [r.id for r in grp if r.id in exportable]
+            if not ids:
+                return None
+            state = self.engine.export_request_state(ids)
+            # model only the UNIQUE state shipped: scale the summed context
+            # by the page-dedup ratio so shared prompt pages count once
+            # (same convention as the sim path's prompt dedup)
+            entries = sum(len(q["page_idx"]) for q in state["requests"])
+            kv_tokens = int(sum(q["ctx_len"] for q in state["requests"])
+                            * state["n_pages"] / max(entries, 1))
+            manifest, blobs, meta = build_kv_manifest(
+                mgr.next_mig_id(), state, codec=codec,
+                chunk_bytes=mgr.store.chunkstore.chunk_bytes)
+            # tiny real payloads stand in for paper-scale KV: normalize the
+            # wire bytes to the perf model's state size (same convention as
+            # weight pulls, so sim and real pace a migration identically)
+            modeled = mgr.perf.kv_state_bytes(self.cfg, kv_tokens) * factor
+            scale = (modeled / manifest.total_bytes
+                     if manifest.total_bytes and modeled > 0 else 1.0)
+            return KVExport(manifest.version, manifest, self.nic, codec,
+                            kv_tokens, ids, meta=meta, blobs=blobs,
+                            wire_scale=scale)
+        # siblings share their prompt's pages: count the prompt once, like
+        # the real export's unique-page dedup does
+        kv_tokens = (sum(r.total_len for r in grp)
+                     - (len(grp) - 1) * grp[0].prompt_len)
+        modeled = mgr.perf.kv_state_bytes(self.cfg, kv_tokens)
+        if modeled <= 0:
+            return None                 # no KV to model -> re-prefill path
+        mig_id = mgr.next_mig_id()
+        manifest = synthetic_manifest(mig_id, modeled, mgr.kv_sim_chunks,
+                                      codec=codec, tag="kvmig")
+        return KVExport(mig_id, manifest, self.nic, codec, kv_tokens,
+                        [r.id for r in grp])
+
+    # ---------------- KV-page migration (destination side) ---------------- #
+    def _prefer_kv(self, export: KVExport, grp: List[Request]) -> bool:
+        mode = self.manager.migration
+        if mode != "auto":
+            return mode == "kv"
+        # the pull always fetches the WHOLE manifest (export.kv_tokens:
+        # shared prompt pages counted once, absent siblings' pages too);
+        # re-prefill costs every landing sibling its full context (migrated
+        # requests admit individually — no prefix sharing on re-prefill)
+        t_kv, t_pf = self.manager.perf.migration_stall_times(
+            export.agent.gbps, self.kind, self.cfg, export.kv_tokens,
+            prefill_tokens=sum(r.total_len for r in grp),
+            codec_factor=COMPRESSION_FACTOR.get(export.codec, 1.0))
+        return t_kv < t_pf
+
+    def _start_kv_import(self, grp: List[Request], export: KVExport):
+        for r in grp:
+            self.importing[r.id] = r
+        # bound the cache map, oldest-first, but never evict an export a
+        # live pull (or this one) still draws on — evicting those would
+        # force the full re-fetch the cache exists to prevent
+        live = {rec["export"].mig_id for rec in self._imports}
+        live.add(export.mig_id)
+        for k in [k for k in self._kv_caches if k not in live]:
+            if len(self._kv_caches) <= 16:
+                break
+            del self._kv_caches[k]
+        cache = self._kv_caches.setdefault(export.mig_id, {})
+        rec: Dict = {"reqs": list(grp), "export": export, "pull": None}
+        rec["pull"] = ChunkPull(
+            self.loop, [export.agent], export.manifest,
+            receiver_gbps=self.kind.dcn_gbps, cache=cache,
+            fetch_fn=export.fetch_fn(),
+            fanout=self.manager.transfer_fanout,
+            wire_scale=export.wire_scale,
+            on_complete=lambda pull, rec=rec: self._kv_arrived(rec, pull)
+        ).start()
+        self._imports.append(rec)
+
+    def _kv_arrived(self, rec: Dict, pull):
+        if rec in self._imports:
+            self._imports.remove(rec)
+        grp = [r for r in rec["reqs"] if r.id in self.importing]
+        for r in grp:
+            self.importing.pop(r.id, None)
+        if not self.alive or not grp:
+            return
+        export: KVExport = rec["export"]
+        if self.engine is not None:
+            # lazy: keeps the sim backend free of the jax-heavy engine mod
+            from repro.serving.engine import AdmissionError
+            try:
+                state = assemble_kv_state(export.manifest, pull.cache,
+                                          export.meta)
+                self.engine.import_request_state(
+                    state, only=[r.id for r in grp])
+            except (AdmissionError, MissingChunkError,
+                    ChunkIntegrityError):
+                # destination filled up, or the pulled payload is short /
+                # corrupt: fall back to the re-prefill path HERE (kv must
+                # be cleared, or _admit would deterministically re-prefer
+                # the same doomed import and livelock pulling the manifest
+                # forever).  Any other exception is a real bug and must
+                # crash, not silently degrade.
+                for r in grp:
+                    r.kv = None
+                self.pending[0:0] = grp
+                self._kick()
+                return
+        for r in grp:
+            r.status = Status.EXECUTING
+            self.executing[r.id] = r
+        # resume is zero-recompute: NO prefill tokens are charged — the
+        # stall was the pull itself, already elapsed on the event clock
+        self.manager.note_kv_migration(grp, export, pull)
+        if not any(r.kv is export
+                   for r in list(self.pending) + list(self.importing.values())):
+            self._kv_caches.pop(export.mig_id, None)   # last member landed
+        self._kick()
+
     # ---------------- execution loop ---------------- #
     def _room(self) -> int:
-        room = self.max_exec - len(self.executing)
+        room = self.max_exec - len(self.executing) - len(self.importing)
         if self.engine is not None:
-            room = min(room, self.engine.free_slots())
+            room = min(room,
+                       self.engine.free_slots() - len(self.importing))
         return room
 
     def _admit(self):
         """Admit pending requests; GRPO siblings with the same fresh prompt
         are admitted together so the engine prefills the prompt ONCE and
-        shares its pages (and the modeled prefill cost is deduplicated)."""
+        shares its pages (and the modeled prefill cost is deduplicated).
+        Requests carrying a KV export start a page pull instead of a
+        prefill when the cost model favors it."""
         while self.pending and self._room() > 0:
             r = self.pending.pop(0)
+            if r.kv is not None:
+                grp = [r]
+                for o in list(self.pending):
+                    if o.kv is r.kv and len(grp) < self._room():
+                        self.pending.remove(o)
+                        grp.append(o)
+                if self._prefer_kv(r.kv, grp):
+                    self._start_kv_import(grp, r.kv)
+                    continue
+                for x in grp:            # cost model says re-prefill
+                    x.kv = None
+                self.pending[0:0] = grp
+                continue
             group = [r]
             sharable = (r.n_generated == 0
                         and (self.engine is None
@@ -144,6 +345,8 @@ class RolloutInstance:
             # prefilled once, not len(group) times
             self._pending_prefill_tokens += r.total_len + sum(
                 x.total_len - x.prompt_len for x in group[1:])
+            if r.n_generated > 0:
+                self.manager.n_prefill_migrations += 1
             if self.engine is not None:
                 from repro.rl.sampler import request_key
                 if len(group) > 1:

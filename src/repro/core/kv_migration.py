@@ -1,0 +1,53 @@
+"""Zero-recompute migration: a request's KV pages on the chunk plane.
+
+Paper §4.2 migrates a request by shipping its token history and
+re-prefilling prompt+partial on the destination — a cost that grows
+linearly with the partial response.  This module closes that gap the way
+StreamRL/JigsawRL do: the SOURCE publishes the request's generation state
+(unique KV pages + ring/SSM slot rows, GRPO siblings' shared prompt pages
+deduplicated) as a content-addressed chunk manifest
+(``transfer.chunkstore.build_kv_manifest``), and the DESTINATION pulls it
+through the same ``ChunkPull`` scheduler as weight pulls — sharing the
+per-chunk bandwidth machinery — then adopts the pages into its own pool
+(``InferenceEngine.import_request_state``) and resumes decoding at
+``pos = len(prompt) + len(partial)`` with zero prefill.
+
+A :class:`KVExport` is the handle that rides with the queued request(s):
+the manifest, the source-side blob map (a host copy — it stays servable
+through the preemption grace window after the source VM's accelerators are
+reclaimed), and the source NIC the pull draws bandwidth from.  One export
+covers one GRPO group's co-migrating siblings, so their shared prompt
+pages travel ONCE and are refcount-adopted on import (same COW semantics
+as ``add_group``).
+
+Whether a migration uses the KV path or the legacy re-prefill path is a
+per-migration cost-model decision (``ModelPerf.migration_stall_times``):
+both costs are linear in context length, so the fixed per-migration
+control overhead sets the crossover — short partials re-prefill, long
+tails (the paper's mean-3k/max-14k workloads) ship pages.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.core.weight_transfer import TransferAgent
+from repro.transfer.chunkstore import Manifest
+
+
+@dataclass
+class KVExport:
+    """One migrating request-set's published generation state."""
+    mig_id: int
+    manifest: Manifest
+    agent: TransferAgent          # source NIC serving the chunk fetches
+    codec: str                    # 'none' (bit-exact) | 'int8' (per-page)
+    kv_tokens: int                # context tokens covered (cost model)
+    req_ids: List[int]
+    meta: Optional[Dict] = None   # real backend: out-of-band metadata
+    blobs: Optional[Dict[str, bytes]] = None   # real backend: payload
+    wire_scale: float = 1.0       # payload bytes -> modeled wire bytes
+
+    def fetch_fn(self):
+        return self.blobs.get if self.blobs is not None else None

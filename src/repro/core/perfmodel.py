@@ -13,6 +13,7 @@ mapping from the paper's H100 instances to v5e slices.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional, Tuple
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -50,6 +51,12 @@ class ModelPerf:
     # device->host sync).  The fused decode horizon amortizes it over H
     # tokens; 0.0 keeps legacy per-token pacing bit-identical at H = 1.
     dispatch_overhead_s: float = 0.0
+    # fixed per-migration control cost of shipping KV state (manifest
+    # build, control RTT, import bookkeeping) — the term that makes
+    # re-prefill win for SHORT partials: both transfer and re-prefill
+    # scale linearly with context, so the crossover is set by this
+    # constant (see migration_stall_times / ROADMAP PR 4 notes).
+    migration_overhead_s: float = 0.05
 
     @property
     def weight_bytes(self) -> float:
@@ -105,6 +112,41 @@ class ModelPerf:
 
     def prefill_time(self, kind: InstanceKind, n_tokens: int) -> float:
         return 2.0 * self.n_active * n_tokens / (kind.flops * PREFILL_MFU)
+
+    # ------------------------------------------------------------------ #
+    # KV-page migration (zero-recompute, §4.2 over the chunk plane)
+    # ------------------------------------------------------------------ #
+    def kv_state_bytes(self, cfg, ctx_tokens: float) -> float:
+        """Bytes of generation state a migration ships for ``ctx_tokens``
+        of context (the paged KV; ring/SSM rows are O(window)/O(1) and
+        negligible at paper scale)."""
+        return self.kv_bytes_per_token(cfg) * float(ctx_tokens)
+
+    def kv_transfer_time(self, src_gbps: float, dst_gbps: float, cfg,
+                         ctx_tokens: float,
+                         codec_factor: float = 1.0) -> float:
+        """Modeled stall of a KV-page migration: fixed control overhead +
+        wire time of the (codec-compressed) state over the narrower NIC."""
+        bw = min(src_gbps, dst_gbps) * 1e9 / 8.0
+        return (self.migration_overhead_s
+                + self.kv_state_bytes(cfg, ctx_tokens) * codec_factor
+                / max(bw, 1e-9))
+
+    def migration_stall_times(self, src_gbps: float, dst_kind: InstanceKind,
+                              cfg, kv_tokens: float,
+                              prefill_tokens: Optional[float] = None,
+                              codec_factor: float = 1.0
+                              ) -> Tuple[float, float]:
+        """(kv_transfer_s, re_prefill_s) — the two ways a migrated
+        request-set can resume on the destination; the rollout manager
+        picks the cheaper per migration ("auto" mode).  The two sides may
+        cover different token counts: the transfer ships the export's
+        UNIQUE state (GRPO siblings' shared prompt pages once), while
+        re-prefill charges every landing sibling its full context."""
+        t_kv = self.kv_transfer_time(src_gbps, dst_kind.dcn_gbps, cfg,
+                                     kv_tokens, codec_factor)
+        pf = kv_tokens if prefill_tokens is None else prefill_tokens
+        return t_kv, self.prefill_time(dst_kind, pf)
 
     def train_time(self, kind: InstanceKind, n_tokens: int,
                    n_nodes: int = 1, internode_penalty: float = 1.0) -> float:

@@ -35,6 +35,11 @@ class Request:
     n_migrations: int = 0
     created_at: float = 0.0
     completed_at: Optional[float] = None
+    # zero-recompute migration: the source's published KV export (a
+    # ``core.kv_migration.KVExport``) rides with the request while it is
+    # queued; the destination pulls it over the chunk plane instead of
+    # re-prefilling prompt+partial.  None => token-history migration.
+    kv: Optional[object] = None
 
     @property
     def total_len(self) -> int:

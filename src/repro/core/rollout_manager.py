@@ -40,7 +40,10 @@ class RolloutManager:
                  engine_factory: Optional[Callable] = None,
                  seed: int = 0,
                  transfer_fanout: int = 2,
-                 decode_horizon: int = 1):
+                 decode_horizon: int = 1,
+                 migration: str = "auto",             # | "kv" | "recompute"
+                 kv_codec: str = "none",              # | "int8"
+                 kv_sim_chunks: int = 8):
         self.loop = loop
         self.perf = perf
         self.store = store
@@ -58,6 +61,16 @@ class RolloutManager:
         # sim-backend decode horizon (tokens per fused dispatch); real
         # engines carry their own horizon and the instance follows it
         self.decode_horizon = max(int(decode_horizon), 1)
+        # zero-recompute migration policy: "kv" always ships pages,
+        # "recompute" never does (legacy re-prefill), "auto" lets the cost
+        # model pick per migration (modeled transfer vs re-prefill time)
+        assert migration in ("auto", "kv", "recompute"), migration
+        # KV manifests encode float leaves as none/int8 only (delta codecs
+        # need a resident base, which a migrating request never has)
+        assert kv_codec in ("none", "int8"), kv_codec
+        self.migration = migration
+        self.kv_codec = kv_codec
+        self.kv_sim_chunks = max(int(kv_sim_chunks), 1)
 
         self.instances: Dict[int, RolloutInstance] = {}
         # chunk caches of preempted instances: a restarted instance adopts
@@ -75,6 +88,27 @@ class RolloutManager:
         self.n_preemptions = 0
         self.n_migrations = 0
         self._lb_running = False
+        # KV-page migration accounting
+        self._next_mig_id = 1
+        self.n_kv_migrations = 0        # requests resumed from shipped KV
+        self.n_prefill_migrations = 0   # requests resumed by re-prefill
+        self.kv_bytes_pulled = 0.0      # modeled wire bytes of KV pulls
+        self.kv_stall_s = 0.0           # summed per-pull stall time
+
+    # ------------------------------------------------------------------ #
+    # KV-page migration bookkeeping
+    # ------------------------------------------------------------------ #
+    def next_mig_id(self) -> int:
+        self._next_mig_id += 1
+        return self._next_mig_id
+
+    def note_kv_migration(self, reqs: List[Request], export, pull):
+        self.n_kv_migrations += len(reqs)
+        self.kv_bytes_pulled += pull.bytes_fetched * pull.wire_scale
+        if pull.finished_at is not None and pull.started_at is not None:
+            self.kv_stall_s += pull.finished_at - pull.started_at
+        for r in reqs:
+            r.kv = None
 
     # ------------------------------------------------------------------ #
     # instance lifecycle
@@ -212,6 +246,11 @@ class RolloutManager:
             self._orphan_caches.append(inst.chunk_cache)
         self.spot_seconds += self.loop.now - inst.created_t
         self.n_preemptions += 1
+        if self.fault_mode == "migrate":
+            # publish KV exports within the preemption grace window: the
+            # blob map is a host copy, so it stays fetchable after the
+            # engine (and its page pool) are gone
+            inst.export_kv_requests(list(inst.executing.values()))
         victims = inst.drain_all()
         for r in victims:
             if self.fault_mode == "recompute":
@@ -220,6 +259,7 @@ class RolloutManager:
                 r.logprobs.clear()
                 r.version_spans.clear()
                 r.n_generated = 0
+                r.kv = None
             r.status = Status.QUEUED
             r.instance_id = None
             r.n_migrations += 1
@@ -236,6 +276,9 @@ class RolloutManager:
             inst.pull = None
         if not inst.local:
             self.spot_seconds += self.loop.now - inst.created_t
+        # seeding handoff rides the KV plane too: partials leaving the
+        # released (local) engines resume remotely without a re-prefill
+        inst.export_kv_requests(list(inst.executing.values()))
         victims = inst.drain_all()
         for r in victims:
             r.status = Status.QUEUED
@@ -259,8 +302,10 @@ class RolloutManager:
 
         GRPO-group aware: fresh siblings of the head request's group ride
         along to the same instance so the engine can prefill their shared
-        prompt once (paged prefix sharing).  Requests carrying partial
-        tokens (migrations) dispatch individually as before.
+        prompt once (paged prefix sharing).  Migrated siblings sharing one
+        KV export also ride together — their shared prompt pages exist
+        ONCE in the export, so they must import into the same pool.
+        Other requests carrying partial tokens dispatch individually.
         """
         while self.queued:
             inst_view = self.lb.select_instance(
@@ -269,7 +314,12 @@ class RolloutManager:
                 return                           # all at Theta — hold
             r = self.queued.pop(0)
             batch = [r]
-            if r.n_generated == 0:
+            if r.kv is not None:
+                sibs = [o for o in self.queued if o.kv is r.kv]
+                for o in sibs:
+                    self.queued.remove(o)
+                batch.extend(sibs)
+            elif r.n_generated == 0:
                 sibs = [o for o in self.queued
                         if o.group == r.group and o.n_generated == 0]
                 for o in sibs:
@@ -311,7 +361,16 @@ class RolloutManager:
             # prefer pending requests; fall back to executing
             candidates = [r.id for r in src.pending] + [
                 rid for rid in list(src.executing.keys())]
-            for rid in candidates[:n]:
+            chosen = candidates[:n]
+            # decode-resident victims: publish their KV in ONE export call
+            # before the source frees the pages — co-migrating GRPO
+            # siblings then share one manifest (shared prompt pages ship
+            # once); the cost model decides kv-vs-prefill at admission
+            execing = [src.executing[rid] for rid in chosen
+                       if rid in src.executing]
+            if execing:
+                src.export_kv_requests(execing)
+            for rid in chosen:
                 r = src.take_back(rid)
                 if r is None:
                     continue

@@ -103,6 +103,13 @@ class PagedKVAllocator:
             self.ref[p] += 1
         return list(table)
 
+    def incref(self, page: int):
+        """Add one reference to an already-allocated page (refcount
+        adoption: a migrated GRPO group's shared prompt page is allocated
+        once on import and then incref'd per adopting sibling table)."""
+        assert page != GARBAGE_PAGE and self.ref[page] > 0, page
+        self.ref[page] += 1
+
     def ensure_capacity(self, table: List[int], n_tokens: int):
         """Append fresh pages until the table covers n_tokens positions."""
         need = self.pages_for(n_tokens) - len(table)
@@ -298,6 +305,74 @@ def copy_pool_pages(cache, src, dst):
         if _batch_axis(p) == 1:                 # group-stacked pool [G, P, ...]
             return c.at[:, dst].set(c[:, src])
         return c.at[dst].set(c[src])
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def gather_pages(cache, page_ids) -> "Dict[str, np.ndarray]":
+    """Host copies of the pool pages at ``page_ids`` from every pool leaf
+    (KV-migration export).  Keys are ``jax.tree_util.keystr`` paths; values
+    are ``[n, page_size, K, dh]`` (group-stacked pools: ``[G, n, ...]``)."""
+    ids = np.asarray(page_ids, np.int32)
+    out: Dict[str, np.ndarray] = {}
+
+    def f(p, c):
+        if _is_pool(p):
+            ax = 1 if _batch_axis(p) == 1 else 0
+            out[jax.tree_util.keystr(p)] = np.asarray(
+                jnp.take(c, ids, axis=ax))
+        return c
+
+    jax.tree_util.tree_map_with_path(f, cache)
+    return out
+
+
+def scatter_pages(cache, pages: "Dict[str, np.ndarray]", page_ids):
+    """Write exported page payloads into the pools at ``page_ids`` (KV-
+    migration import; inverse of :func:`gather_pages` up to page renames)."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def f(p, c):
+        if not _is_pool(p):
+            return c
+        v = jnp.asarray(pages[jax.tree_util.keystr(p)], c.dtype)
+        if _batch_axis(p) == 1:
+            return c.at[:, ids].set(v)
+        return c.at[ids].set(v)
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def gather_slot_rows(cache, slot: int) -> "Dict[str, np.ndarray]":
+    """Host copies of the per-slot leaves (ring-buffer K/V, SSM conv/ssm
+    state) at batch row ``slot`` — the non-paged half of a request's
+    generation state; rides along in the same migration manifest."""
+    out: Dict[str, np.ndarray] = {}
+
+    def f(p, c):
+        pstr = jax.tree_util.keystr(p)
+        if _is_pool(p) or pstr == "['pos']":
+            return c
+        if _batch_axis(p) == 1:
+            out[pstr] = np.asarray(c[:, slot])
+        else:
+            out[pstr] = np.asarray(c[slot])
+        return c
+
+    jax.tree_util.tree_map_with_path(f, cache)
+    return out
+
+
+def scatter_slot_rows(cache, rows: "Dict[str, np.ndarray]", slot: int):
+    """Write exported per-slot rows back at batch row ``slot``."""
+    def f(p, c):
+        pstr = jax.tree_util.keystr(p)
+        if _is_pool(p) or pstr == "['pos']" or pstr not in rows:
+            return c
+        v = jnp.asarray(rows[pstr], c.dtype)
+        if _batch_axis(p) == 1:
+            return c.at[:, slot].set(v)
+        return c.at[slot].set(v)
+
     return jax.tree_util.tree_map_with_path(f, cache)
 
 

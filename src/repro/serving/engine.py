@@ -303,6 +303,9 @@ class InferenceEngine:
         self.n_decode_dispatches = 0            # fused horizon launches
         self.n_state_uploads = 0                # host->device state syncs
         self.n_bt_uploads = 0                   # host->device block tables
+        self.n_kv_export_pages = 0              # migration: pages shipped out
+        self.n_kv_import_pages = 0              # migration: pages adopted
+        self.n_kv_import_tokens = 0             # context resumed w/o prefill
 
     # ------------------------------------------------------------------ #
     def swap_weights(self, params, version: int):
@@ -656,6 +659,131 @@ class InferenceEngine:
             val = jnp.asarray([v for _, v in pos_fix], jnp.int32)
             self.cache["pos"] = self.cache["pos"].at[idx].set(val)
         return events
+
+    # ------------------------------------------------------------------ #
+    # KV-page migration (zero-recompute, paper §4.2 over the chunk plane)
+    # ------------------------------------------------------------------ #
+    def exportable_request_ids(self) -> List[int]:
+        """Requests whose KV state can be exported: decode-resident slots.
+        Requests still waiting for (chunked) prefill migrate by token
+        history as before — they have no complete KV to ship."""
+        return [s.req_id for s in self.slots if s is not None]
+
+    def export_request_state(self, req_ids: List[int]) -> Dict:
+        """Export the full generation state of ``req_ids`` as host arrays.
+
+        The export is GRPO-aware: pages shared between exported siblings
+        (COW prompt sharing) appear ONCE in the unique-page payload, and
+        each request's table is a list of indices into it.  Ring-buffer /
+        SSM per-slot rows ride along under ``slot_state``.  Only pages
+        covering ``ctx_len`` ship — horizon-reserved tail pages past the
+        context are re-reserved by the destination.  The source state is
+        untouched; callers drop the requests after a successful export.
+        """
+        by_id = {s.req_id: (i, s) for i, s in enumerate(self.slots)
+                 if s is not None}
+        unique: List[int] = []
+        uidx: Dict[int, int] = {}
+        requests: List[Dict] = []
+        slot_state: Dict[int, Dict] = {}
+        for rid in req_ids:
+            if rid not in by_id:
+                raise KeyError(f"request {rid} has no decode-resident state")
+            slot, st = by_id[rid]
+            idxs = []
+            for p in st.table[:self.alloc.pages_for(st.ctx_len)]:
+                if p not in uidx:
+                    uidx[p] = len(unique)
+                    unique.append(p)
+                idxs.append(uidx[p])
+            requests.append(dict(
+                req_id=rid, tokens=list(st.tokens), n_prompt=st.n_prompt,
+                max_total=st.max_total, last_token=st.last_token,
+                ctx_len=st.ctx_len,
+                key_data=np.array(st.key_data, np.uint32),
+                page_idx=idxs))
+            if not self._chunkable:         # ring / SSM state exists
+                slot_state[rid] = kvc.gather_slot_rows(self.cache, slot)
+        pages = (kvc.gather_pages(self.cache, unique) if unique else {})
+        self.n_kv_export_pages += len(unique)
+        return dict(page_size=self.page_size, n_pages=len(unique),
+                    pages=pages, requests=requests, slot_state=slot_state)
+
+    def import_request_state(self, state: Dict,
+                             only: Optional[List[int]] = None) -> List[int]:
+        """Adopt exported KV state: requests resume decoding at
+        ``pos = len(prompt) + len(partial)`` with ZERO prefill.
+
+        Pages are allocated once per unique page actually referenced by the
+        imported requests and written from the payload; tables referencing
+        the same page (migrated GRPO siblings' shared prompt) adopt it by
+        refcount — identical COW semantics to ``add_group``.  ``only``
+        restricts the import to a subset of the exported requests (partial
+        group landing); unreferenced pages are neither allocated nor
+        written.  Raises :class:`AdmissionError` when slots are short.
+        """
+        if state["page_size"] != self.page_size:
+            raise AdmissionError(
+                f"page_size mismatch: export {state['page_size']} vs "
+                f"engine {self.page_size}")
+        reqs = [r for r in state["requests"]
+                if only is None or r["req_id"] in only]
+        if not reqs:
+            return []
+        self._check_admission(
+            max(r["ctx_len"] for r in reqs),
+            max(r["max_total"] for r in reqs), need_slots=len(reqs))
+        # allocate each referenced unique page once
+        used = sorted({i for r in reqs for i in r["page_idx"]})
+        while True:
+            try:
+                fresh = self.alloc.alloc(len(used))
+                break
+            except OutOfPages:
+                self._grow_pool()
+        page_map = dict(zip(used, fresh))
+        if used:
+            # select the referenced pages from the payload (group-stacked
+            # pools carry a leading G axis -> page axis is ndim-4 either way)
+            sel = {k: np.take(np.asarray(v), used, axis=v.ndim - 4)
+                   for k, v in state["pages"].items()}
+            self.cache = kvc.scatter_pages(self.cache, sel, fresh)
+        slots = []
+        referenced: Dict[int, int] = {}
+        for r in reqs:
+            rid = r["req_id"]
+            slot = self._reserve_slot(rid)
+            del self._reserved[rid]
+            table = []
+            for i in r["page_idx"]:
+                p = page_map[i]
+                if p in referenced:
+                    self.alloc.incref(p)     # shared-page adoption
+                else:
+                    referenced[p] = rid      # first table keeps alloc's ref
+                table.append(p)
+            st = SlotState(req_id=rid, key_data=np.array(r["key_data"],
+                                                         np.uint32),
+                           tokens=list(r["tokens"]), n_prompt=r["n_prompt"],
+                           max_total=r["max_total"],
+                           last_token=r["last_token"], table=table,
+                           ctx_len=r["ctx_len"])
+            self.slots[slot] = st
+            self.tokens_buf[slot] = r["last_token"]
+            self.keys_buf[slot] = st.key_data
+            self.maxtot_buf[slot] = r["max_total"]
+            if rid in state["slot_state"]:
+                self.cache = kvc.scatter_slot_rows(
+                    self.cache, state["slot_state"][rid], slot)
+            slots.append(slot)
+            self.n_kv_import_tokens += r["ctx_len"]
+        self.n_kv_import_pages += len(used)
+        idx = jnp.asarray(slots, jnp.int32)
+        val = jnp.asarray([r["ctx_len"] for r in reqs], jnp.int32)
+        self.cache["pos"] = self.cache["pos"].at[idx].set(val)
+        self._state_dirty = True
+        self._bt_dirty = True
+        return slots
 
     # ------------------------------------------------------------------ #
     def drop_request(self, req_id: int) -> Optional[List[int]]:

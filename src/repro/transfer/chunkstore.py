@@ -90,14 +90,19 @@ def flatten_params(tree) -> "OrderedDict[str, np.ndarray]":
 def build_manifest(version: int, flat: Mapping[str, np.ndarray], *,
                    codec: str = "none", chunk_bytes: int = 1 << 20,
                    base_flat: Optional[Mapping[str, np.ndarray]] = None,
-                   base_version: Optional[int] = None):
-    """Encode ``flat`` and cut it into chunks; returns (Manifest, stream)."""
+                   base_version: Optional[int] = None,
+                   leaf_codec=None):
+    """Encode ``flat`` and cut it into chunks; returns (Manifest, stream).
+
+    ``leaf_codec(key, arr) -> str`` overrides the codec per leaf (KV
+    manifests quantize float pages but keep integer leaves exact)."""
     payloads, leaves, off = [], [], 0
     for key, arr in flat.items():
+        lc = codec if leaf_codec is None else leaf_codec(key, arr)
         pb = codec_mod.encode_leaf(
-            arr, codec, base=None if base_flat is None else base_flat[key])
+            arr, lc, base=None if base_flat is None else base_flat[key])
         leaves.append(LeafSpec(key, tuple(arr.shape), str(arr.dtype),
-                               codec, off, len(pb)))
+                               lc, off, len(pb)))
         off += len(pb)
         payloads.append(pb)
     stream = b"".join(payloads)
@@ -112,10 +117,13 @@ def build_manifest(version: int, flat: Mapping[str, np.ndarray], *,
 
 def synthetic_manifest(version: int, total_bytes: float, n_chunks: int, *,
                        codec: str = "none",
-                       base_version: Optional[int] = None) -> Manifest:
+                       base_version: Optional[int] = None,
+                       tag: str = "sim") -> Manifest:
     """Chunk-level stand-in for the sim backend: no payload, deterministic
     pseudo-digests (stable across restarts of the same version so warm
-    caches resume), wire size scaled by the codec's compression factor."""
+    caches resume), wire size scaled by the codec's compression factor.
+    ``tag`` namespaces the pseudo-digests (weight pulls vs KV migrations)
+    so unrelated synthetic manifests can never alias in a shared cache."""
     if codec == "delta-int8" and base_version is None:
         codec = "int8"
     if codec != "delta-int8":
@@ -123,8 +131,8 @@ def synthetic_manifest(version: int, total_bytes: float, n_chunks: int, *,
     eff = max(int(total_bytes * COMPRESSION_FACTOR[codec]), 1)
     n = max(min(n_chunks, eff), 1)      # never emit empty tail chunks
     per = -(-eff // n)
-    tag = f"sim:v{version}" + (f":b{base_version}"
-                               if base_version is not None else "")
+    tag = f"{tag}:v{version}" + (f":b{base_version}"
+                                 if base_version is not None else "")
     chunks = tuple(ChunkMeta(f"{tag}:c{i}", i * per,
                              max(min(per, eff - i * per), 0))
                    for i in range(n))
@@ -205,37 +213,130 @@ class ChunkStore:
     # ------------------------------------------------------------------ #
     def assemble(self, manifest: Manifest, chunks: Mapping[str, bytes], *,
                  like=None, base_params=None, use_pallas: bool = False):
-        """Checksum-verify + reassemble + decode a pulled manifest.
+        return assemble_manifest(manifest, chunks, like=like,
+                                 base_params=base_params,
+                                 use_pallas=use_pallas)
 
-        ``chunks``: digest -> bytes (the puller's local cache).  ``like``:
-        a pytree with the target structure; when given, returns a pytree
-        (leaves as jax arrays), else a flat {key: np.ndarray} dict.
-        ``base_params`` is required for delta manifests — the RECEIVER's
-        resident weights (the delta accumulates onto them).
-        """
-        buf = bytearray(manifest.total_bytes)
-        for c in manifest.chunks:
-            if c.digest not in chunks:
-                raise MissingChunkError(c.digest)
-            data = chunks[c.digest]
-            if len(data) != c.nbytes or _sha(data) != c.digest:
-                raise ChunkIntegrityError(
-                    f"chunk at offset {c.offset} fails checksum")
-            buf[c.offset:c.offset + c.nbytes] = data
-        base_flat = (flatten_params(base_params)
-                     if base_params is not None else None)
-        out = OrderedDict()
-        for spec in manifest.leaves:
-            payload = bytes(buf[spec.offset:spec.offset + spec.nbytes])
-            base = (base_flat[spec.key]
-                    if spec.codec == "delta-int8" else None)
-            out[spec.key] = codec_mod.decode_leaf(payload, spec, base=base,
-                                                  use_pallas=use_pallas)
-        if like is None:
-            return out
-        import jax
-        import jax.numpy as jnp
-        treedef = jax.tree.structure(like)
-        leaves = [jnp.asarray(out[jax.tree_util.keystr(p)])
-                  for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
-        return jax.tree.unflatten(treedef, leaves)
+
+def assemble_manifest(manifest: Manifest, chunks: Mapping[str, bytes], *,
+                      like=None, base_params=None, use_pallas: bool = False):
+    """Checksum-verify + reassemble + decode a pulled manifest.
+
+    ``chunks``: digest -> bytes (the puller's local cache).  ``like``:
+    a pytree with the target structure; when given, returns a pytree
+    (leaves as jax arrays), else a flat {key: np.ndarray} dict.
+    ``base_params`` is required for delta manifests — the RECEIVER's
+    resident weights (the delta accumulates onto them).
+    """
+    buf = bytearray(manifest.total_bytes)
+    for c in manifest.chunks:
+        if c.digest not in chunks:
+            raise MissingChunkError(c.digest)
+        data = chunks[c.digest]
+        if len(data) != c.nbytes or _sha(data) != c.digest:
+            raise ChunkIntegrityError(
+                f"chunk at offset {c.offset} fails checksum")
+        buf[c.offset:c.offset + c.nbytes] = data
+    base_flat = (flatten_params(base_params)
+                 if base_params is not None else None)
+    out = OrderedDict()
+    for spec in manifest.leaves:
+        payload = bytes(buf[spec.offset:spec.offset + spec.nbytes])
+        base = (base_flat[spec.key]
+                if spec.codec == "delta-int8" else None)
+        out[spec.key] = codec_mod.decode_leaf(payload, spec, base=base,
+                                              use_pallas=use_pallas)
+    if like is None:
+        return out
+    import jax
+    import jax.numpy as jnp
+    treedef = jax.tree.structure(like)
+    leaves = [jnp.asarray(out[jax.tree_util.keystr(p)])
+              for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------- #
+# KV-migration manifests (zero-recompute migration over the chunk plane)
+# --------------------------------------------------------------------------- #
+# An engine KV export (``InferenceEngine.export_request_state``) travels on
+# the SAME chunk plane as weight pulls: the bulk payload — unique KV pages
+# plus per-slot ring/SSM rows — is flattened to per-PAGE leaves, encoded by
+# the transfer codec (``none`` bit-exact, ``int8`` per-page quant for cheap
+# links), chunked, and content-addressed exactly like a weight manifest, so
+# the identical ``ChunkPull`` scheduler moves it and shares bandwidth with
+# in-flight weight pulls.  The small host-side metadata (token history,
+# page-index tables, sampling keys) rides out-of-band as ``kv_meta``.
+
+def kv_flat(state: Mapping) -> "OrderedDict[str, np.ndarray]":
+    """Flatten an engine KV export's bulk arrays into manifest leaves.
+
+    One leaf PER PAGE per pool leaf (``kv:page:{j}:{pool-key}``) so int8
+    quantization scales are per page, plus one leaf per per-slot state row
+    (``kv:slot:{req_id}:{leaf-key}``)."""
+    flat: "OrderedDict[str, np.ndarray]" = OrderedDict()
+    for key, arr in state["pages"].items():
+        arr = np.asarray(arr)
+        ax = arr.ndim - 4                 # page axis (group pools lead G)
+        for j in range(state["n_pages"]):
+            flat[f"kv:page:{j}:{key}"] = np.take(arr, j, axis=ax)
+    for rid, rows in state["slot_state"].items():
+        for key, arr in rows.items():
+            flat[f"kv:slot:{rid}:{key}"] = np.asarray(arr)
+    return flat
+
+
+def kv_meta(state: Mapping) -> Dict:
+    """The out-of-band half of a KV export: everything but bulk arrays."""
+    return dict(page_size=state["page_size"], n_pages=state["n_pages"],
+                requests=state["requests"])
+
+
+def _kv_leaf_codec(codec: str):
+    def pick(key: str, arr: np.ndarray) -> str:
+        if codec == "none" or not np.issubdtype(np.asarray(arr).dtype,
+                                                np.floating):
+            return "none"
+        return "int8"
+    return pick
+
+
+def build_kv_manifest(mig_id: int, state: Mapping, *, codec: str = "none",
+                      chunk_bytes: int = 1 << 20):
+    """Manifest + blobs for one migration's KV payload.
+
+    Returns ``(manifest, blobs, meta)``: ``blobs`` is the digest->bytes map
+    the source serves during the migration (grace-period host copy), and
+    ``meta`` the out-of-band metadata ``assemble_kv_state`` needs."""
+    m, stream = build_manifest(mig_id, kv_flat(state), codec=codec,
+                               chunk_bytes=chunk_bytes,
+                               leaf_codec=_kv_leaf_codec(codec))
+    blobs = {c.digest: stream[c.offset:c.offset + c.nbytes]
+             for c in m.chunks}
+    return m, blobs, kv_meta(state)
+
+
+def assemble_kv_state(manifest: Manifest, chunks: Mapping[str, bytes],
+                      meta: Mapping) -> Dict:
+    """Rebuild an importable KV state from pulled chunks + metadata
+    (inverse of ``build_kv_manifest`` up to codec loss)."""
+    flat = assemble_manifest(manifest, chunks)
+    per_page: "OrderedDict[str, Dict[int, np.ndarray]]" = OrderedDict()
+    slot_state: Dict[int, Dict[str, np.ndarray]] = {}
+    for key, arr in flat.items():
+        if key.startswith("kv:page:"):
+            _, _, j, leaf = key.split(":", 3)
+            per_page.setdefault(leaf, {})[int(j)] = arr
+        elif key.startswith("kv:slot:"):
+            _, _, rid, leaf = key.split(":", 3)
+            slot_state.setdefault(int(rid), {})[leaf] = arr
+        else:
+            raise KeyError(f"not a KV-manifest leaf: {key}")
+    pages = {}
+    for leaf, by_page in per_page.items():
+        slices = [by_page[j] for j in range(len(by_page))]
+        # page axis: 0 for [ps, K, dh] slices, 1 when a leading G rides
+        pages[leaf] = np.stack(slices, axis=slices[0].ndim - 3)
+    return dict(page_size=meta["page_size"], n_pages=meta["n_pages"],
+                requests=meta["requests"], pages=pages,
+                slot_state=slot_state)

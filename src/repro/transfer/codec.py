@@ -21,6 +21,12 @@ delta-accumulate in one device pass — with the plain-numpy math as the
 host fallback.  Quantization convention: leaves are viewed as
 [rows, last_dim] with a per-channel scale; 1-D/0-D leaves quantize as a
 [n, 1] column with one global scale.
+
+The same codecs carry KV-page migrations (``chunkstore.build_kv_manifest``):
+there each manifest leaf is ONE page ``[page_size, K, dh]``, so the int8
+scales are per page x head-dim channel — error <= scale/2 per element,
+bounded by that page's own magnitude (``tests/test_kv_migration.py``
+checks the bound against the ``kernels.ref`` dequant oracle).
 """
 
 from __future__ import annotations
