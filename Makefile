@@ -7,8 +7,8 @@
 # sees it, silently dropping the user's PYTHONPATH.
 PY := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test lint bench-smoke bench-migration check-regression \
-        refresh-baselines ci
+.PHONY: test lint bench-smoke bench-kernels bench-migration \
+        check-regression refresh-baselines ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -26,6 +26,12 @@ bench-smoke:
 
 bench-migration:
 	$(PY) -m benchmarks.run --quick --only migration
+
+# interpret-mode kernel checks standalone (paged decode + prefill vs their
+# oracles with ragged-length HBM-byte accounting) — the fast loop when
+# iterating on kernels/
+bench-kernels:
+	$(PY) -m benchmarks.run --quick --only kernels
 
 check-regression:
 	$(PY) -m benchmarks.check_regression

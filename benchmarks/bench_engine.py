@@ -1,5 +1,6 @@
 """Engine decode-horizon benchmark: tokens/s and per-token dispatch cost
-swept over the fused horizon H and the batch size.
+swept over the fused horizon H and the batch size, plus a dense-vs-ragged
+hot-path sweep.
 
 The tiny-model engine on CPU is dispatch-dominated, which is exactly the
 regime the fused horizon targets: one jitted scan per H tokens instead of
@@ -7,6 +8,14 @@ one dispatch (+ host loop + device<->host sync) per token.  Reported
 ``ms_per_token`` is wall time per generated token post-warmup; it must
 decrease monotonically with H on the quick config (the acceptance check),
 and ``ms_per_dispatch`` shows the amortized launch cost directly.
+
+The dense-vs-ragged sweep runs the SAME workload with ``use_pallas``
+toggled and reports, next to the per-token wall time of each path, the
+MODELED decode HBM KV bytes: the ragged kernels read the true per-slot
+context (``perfmodel.decode_kv_read_bytes``), the retired dense
+gather_pages path read the full padded ``bt_width * page_size`` table per
+token per row.  Their ratio is deterministic (token streams are parity-
+tested) and gated by ``check_regression.py``.
 """
 
 import json
@@ -18,37 +27,59 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config
+from repro.core.perfmodel import model_perf_from_cfg
 from repro.data import tokenizer as tok
 from repro.models import init_params
 from repro.rl.sampler import request_key
 from repro.serving.engine import InferenceEngine
 
 HORIZONS = [1, 4, 8, 16]
+PAGE = 16
 
 
-def _bench_one(cfg, params, B: int, H: int, gen: int) -> dict:
+def _bench_one(cfg, params, B: int, H: int, gen: int, *,
+               use_pallas=None, prompt=None) -> dict:
     eng = InferenceEngine(cfg, params, max_batch=B, slab_len=64,
-                          temperature=1.0, page_size=16, horizon=H)
-    prompt = tok.encode("12+34=")
+                          temperature=1.0, page_size=PAGE, horizon=H,
+                          use_pallas=use_pallas)
+    prompt = tok.encode("12+34=") if prompt is None else prompt
+    L = len(prompt)
     # greedy-length budget; EOS may end rows early (counted, not assumed)
     for i in range(B):
         eng.add_request(i, prompt, request_key(0, i),
-                        len(prompt) + gen + 1, len(prompt))
-    eng.step()                              # prefill + compile
-    eng.step()                              # compile the fused decode
+                        L + gen + 1, L)
+    gen_per_row = {i: 0 for i in range(B)}
+    for e in eng.step():                    # prefill + compile
+        gen_per_row[e.req_id] += 1
+    for e in eng.step():                    # compile the fused decode
+        gen_per_row[e.req_id] += 1
     t0 = time.perf_counter()
     n_tokens, n_steps = 0, 0
     while eng.n_active:
-        n_tokens += len(eng.step())
+        for e in eng.step():
+            gen_per_row[e.req_id] += 1
+            n_tokens += 1
         n_steps += 1
     dt = max(time.perf_counter() - t0, 1e-9)
+    # wall time is post-warmup only, but the byte model covers EVERY decode
+    # read of the run (warmup steps included): generated token j >= 2 of a
+    # row is decoded against lengths = L + j - 1 (token 1 comes from the
+    # prefill sampling, no decode read)
+    kvpt = model_perf_from_cfg(cfg).kv_bytes_per_token(cfg)
+    ragged_positions = sum(L + j
+                           for g in gen_per_row.values()
+                           for j in range(1, g))
+    width = max(eng._bt_width, 1)
+    dense_positions = sum(g - 1 for g in gen_per_row.values()) * width * PAGE
     return dict(batch=B, horizon=H, tokens=n_tokens, steps=n_steps,
                 wall_s=dt, tok_per_s=n_tokens / dt,
                 ms_per_token=1e3 * dt / max(n_tokens, 1),
                 ms_per_dispatch=1e3 * dt / max(n_steps, 1),
                 n_dispatches=eng.n_decode_dispatches,
                 n_state_uploads=eng.n_state_uploads,
-                n_bt_uploads=eng.n_bt_uploads)
+                n_bt_uploads=eng.n_bt_uploads,
+                ragged_kv_bytes=ragged_positions * kvpt,
+                dense_kv_bytes=dense_positions * kvpt)
 
 
 def main(quick: bool = True):
@@ -66,7 +97,11 @@ def main(quick: bool = True):
     for B in batches:
         per_tok = []
         for H in HORIZONS:
-            r = min((_bench_one(cfg, params, B, H, gen)
+            # the H-curve isolates host-dispatch amortization, so it pins
+            # the dense jnp attention path: interpret-mode Pallas wall time
+            # is meaningless for TPU perf and would confound the signal
+            # (the ragged path's wall clock is tracked by the sweep below)
+            r = min((_bench_one(cfg, params, B, H, gen, use_pallas=False)
                      for _ in range(reps)),
                     key=lambda x: x["ms_per_token"])
             rows.append(r)
@@ -78,10 +113,36 @@ def main(quick: bool = True):
         mono = all(a >= b for a, b in zip(per_tok, per_tok[1:]))
         emit(f"engine/per_token_monotonic_decreasing/B{B}", int(mono),
              per_tok[0] / max(per_tok[-1], 1e-12))
+
+    # ---- dense-vs-ragged hot path: same workload, use_pallas toggled ----
+    # a longer prompt makes the padded table width visibly exceed the true
+    # context, which is exactly the gap the ragged kernels close
+    long_prompt = ([tok.BOS] + tok.encode("12+34=56+78=90") * 3)[:40]
+    cmp_rows = {}
+    for use_pallas in (False, True):
+        path = "ragged" if use_pallas else "dense"
+        r = min((_bench_one(cfg, params, 4, 8, gen, use_pallas=use_pallas,
+                            prompt=long_prompt) for _ in range(reps)),
+                key=lambda x: x["ms_per_token"])
+        r["path"] = path
+        cmp_rows[path] = r
+        emit(f"engine/ms_per_token/{path}", r["ms_per_token"],
+             r["ragged_kv_bytes" if use_pallas else "dense_kv_bytes"])
+    bytes_ratio = (cmp_rows["ragged"]["ragged_kv_bytes"]
+                   / max(cmp_rows["dense"]["dense_kv_bytes"], 1e-9))
+    time_ratio = (cmp_rows["ragged"]["ms_per_token"]
+                  / max(cmp_rows["dense"]["ms_per_token"], 1e-12))
+    # modeled HBM reads scale with TRUE context, not padded table width
+    emit("engine/ragged_vs_dense_bytes_ratio", bytes_ratio, time_ratio)
+    assert bytes_ratio < 1.0, bytes_ratio
+
     out = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench", "engine.json")
     with open(out, "w") as f:
-        json.dump(dict(horizons=HORIZONS, rows=rows), f, indent=1)
+        json.dump(dict(horizons=HORIZONS, rows=rows,
+                       ragged_vs_dense=dict(
+                           bytes_ratio=bytes_ratio, time_ratio=time_ratio,
+                           rows=list(cmp_rows.values()))), f, indent=1)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.paged_prefill import paged_prefill_attention
 from repro.kernels.ssd_scan import ssd_scan
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
 from benchmarks.common import emit
@@ -69,6 +70,31 @@ def main(quick: bool = False):
     byts3 = 2 * pages_read * ps * K * d * 2
     emit("kernel/paged_decode_attention/err", err3p, byts3,
          byts3 / HBM_BW * 1e6)
+
+    # ragged paged prefill (chunk C against a paged prefix): modeled HBM
+    # bytes mirror the decode bench — the kernel streams only LIVE prefix
+    # pages (pl.when skips pages past each row's offset), so read bytes
+    # follow the true prefix lengths; the dense gather it replaces read the
+    # full padded nb*ps table per row
+    C = 128 if quick else 256
+    ks = jax.random.split(key, 6)
+    qp = jax.random.normal(ks[0], (B2, C, H, d), jnp.bfloat16)
+    kq = jax.random.normal(ks[1], (B2, C, K, d), jnp.bfloat16)
+    vq = jax.random.normal(ks[2], (B2, C, K, d), jnp.bfloat16)
+    offs = jax.random.randint(ks[3], (B2,), 0, T + 1)
+    cls = jax.random.randint(ks[4], (B2,), 1, C + 1)
+    o4 = paged_prefill_attention(qp, kq, vq, kp, vp, bt, offs, cls,
+                                 interpret=True)
+    r4 = ref.paged_prefill_attention_ref(qp, kq, vq, kp, vp, bt, offs, cls)
+    err4 = float(jnp.abs(o4.astype(jnp.float32)
+                         - r4.astype(jnp.float32)).max())
+    live_pages = int(jnp.sum(-(-offs // ps)))
+    byts4 = 2 * (live_pages * ps + B2 * C) * K * d * 2   # K+V: prefix + chunk
+    dense_byts4 = 2 * (B2 * nb * ps + B2 * C) * K * d * 2
+    emit("kernel/paged_prefill_attention/err", err4, byts4,
+         byts4 / HBM_BW * 1e6)
+    emit("kernel/paged_prefill_attention/live_vs_padded_bytes",
+         byts4 / dense_byts4, byts4, dense_byts4)
 
     # ssd scan (mamba2-130m geometry)
     b, L, Hh, G, P, N = 1, 512 if quick else 2048, 24, 1, 64, 128

@@ -56,6 +56,17 @@ METRICS = [
     ("engine.json", "decode_ms_ratio_H16_vs_H1",
      lambda d: _engine_ratio(d, 16),
      dict(rel=1.0, atol=0.25, direction="worse_above")),
+    # ragged serving hot path (PR 5): the modeled dense->ragged HBM-byte
+    # ratio is deterministic (parity-tested token streams, analytic byte
+    # model) and gates two-sided; the wall-clock ratio of the two paths is
+    # same-machine but scheduler-noisy, so it gates one-sided and wide
+    # (fails when the ragged path's relative cost roughly doubles)
+    ("engine.json", "ragged_vs_dense_modeled_bytes_ratio",
+     lambda d: d["ragged_vs_dense"]["bytes_ratio"],
+     dict(direction="both")),
+    ("engine.json", "ragged_vs_dense_ms_per_token_ratio",
+     lambda d: d["ragged_vs_dense"]["time_ratio"],
+     dict(rel=2.0, atol=0.5, direction="worse_above")),
     ("transfer.json", "cold_provision_none_c64_p4",
      lambda d: d["none/c64/p4"], dict(direction="both")),
     ("transfer.json", "cold_provision_int8_c64_p4",

@@ -76,6 +76,10 @@ class RolloutInstance:
         self._kv_caches: Dict[int, Dict] = {}
         self._step_scheduled = False
         self._pending_prefill_tokens = 0
+        # ragged-prefill accounting: prefix positions the paged prefill
+        # kernel re-reads when pending contexts chunk (true lengths, not
+        # padded table width — mirrors ModelPerf.prefill_kv_read_bytes)
+        self._pending_prefill_prefix_tokens = 0.0
         self.busy_time = 0.0
         self.tokens_out = 0
         self.last_active_t = loop.now
@@ -345,6 +349,10 @@ class RolloutInstance:
             # prefilled once, not len(group) times
             self._pending_prefill_tokens += r.total_len + sum(
                 x.total_len - x.prompt_len for x in group[1:])
+            chunk = (self.engine.prefill_chunk if self.engine is not None
+                     else 256)
+            self._pending_prefill_prefix_tokens += \
+                ModelPerf.chunked_prefill_prefix_tokens(r.total_len, chunk)
             if r.n_generated > 0:
                 self.manager.n_prefill_migrations += 1
             if self.engine is not None:
@@ -374,8 +382,11 @@ class RolloutInstance:
                                           ctx_lens=ctx_lens,
                                           horizon=self.horizon)
         if self._pending_prefill_tokens:
-            t += self.perf.prefill_time(self.kind, self._pending_prefill_tokens)
+            t += self.perf.prefill_time(
+                self.kind, self._pending_prefill_tokens, cfg=self.cfg,
+                prefix_tokens=self._pending_prefill_prefix_tokens)
             self._pending_prefill_tokens = 0
+            self._pending_prefill_prefix_tokens = 0.0
         return t
 
     def _emit(self, r: Request, ev):

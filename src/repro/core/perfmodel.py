@@ -76,6 +76,24 @@ class ModelPerf:
         proportional to the TRUE context lengths, not slab capacity."""
         return self.kv_bytes_per_token(cfg) * float(sum(ctx_lens))
 
+    def prefill_kv_read_bytes(self, cfg, prefix_lens) -> float:
+        """HBM bytes the ragged paged-PREFILL kernel reads for the prefix
+        pages of a chunk batch: proportional to the TRUE prefix lengths
+        (``pl.when`` skips pages at/past each row's offset), not the padded
+        ``nb * page_size`` table width the dense gather materialized."""
+        return self.kv_bytes_per_token(cfg) * float(sum(prefix_lens))
+
+    @staticmethod
+    def chunked_prefill_prefix_tokens(ctx_tokens: float,
+                                      chunk: int = 256) -> float:
+        """Total prefix positions the ragged prefill kernel streams when a
+        context of ``ctx_tokens`` prefills in ``chunk``-token chunks (chunk
+        j attends offset j*chunk): chunk * k*(k-1)/2 for k chunks."""
+        if chunk <= 0 or ctx_tokens <= chunk:
+            return 0.0
+        k = -(-int(ctx_tokens) // chunk)
+        return float(chunk) * k * (k - 1) / 2.0
+
     # ------------------------------------------------------------------ #
     def decode_step_time(self, kind: InstanceKind, batch: int,
                          avg_ctx: float, cfg=None, ctx_lens=None) -> float:
@@ -110,8 +128,18 @@ class ModelPerf:
                                        ctx_lens=cl)
         return t + self.dispatch_overhead_s
 
-    def prefill_time(self, kind: InstanceKind, n_tokens: int) -> float:
-        return 2.0 * self.n_active * n_tokens / (kind.flops * PREFILL_MFU)
+    def prefill_time(self, kind: InstanceKind, n_tokens: int, cfg=None,
+                     prefix_tokens: float = 0.0) -> float:
+        """Prefill roofline: compute-bound at prefill MFU, except that
+        CHUNKED prefill also streams the already-written prefix KV back
+        through HBM (``prefix_tokens`` positions, ragged-kernel accounting
+        — see :meth:`prefill_kv_read_bytes`); the memory term matters only
+        for long contexts split into many chunks."""
+        compute = 2.0 * self.n_active * n_tokens / (kind.flops * PREFILL_MFU)
+        if cfg is None or prefix_tokens <= 0.0:
+            return compute
+        mem = self.prefill_kv_read_bytes(cfg, [prefix_tokens]) / kind.hbm
+        return max(compute, mem)
 
     # ------------------------------------------------------------------ #
     # KV-page migration (zero-recompute, §4.2 over the chunk plane)
@@ -146,7 +174,12 @@ class ModelPerf:
         t_kv = self.kv_transfer_time(src_gbps, dst_kind.dcn_gbps, cfg,
                                      kv_tokens, codec_factor)
         pf = kv_tokens if prefill_tokens is None else prefill_tokens
-        return t_kv, self.prefill_time(dst_kind, pf)
+        # the re-prefill estimate must match what the destination instance
+        # will actually charge: chunked prefill re-reads the growing prefix
+        # through the ragged kernel (default engine chunking)
+        return t_kv, self.prefill_time(
+            dst_kind, pf, cfg=cfg,
+            prefix_tokens=self.chunked_prefill_prefix_tokens(pf))
 
     def train_time(self, kind: InstanceKind, n_tokens: int,
                    n_nodes: int = 1, internode_penalty: float = 1.0) -> float:

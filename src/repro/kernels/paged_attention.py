@@ -29,6 +29,17 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1.0e30
 
 
+def _live_page(bt, lens, b, ti, ps):
+    """Page index for grid step ``ti``, clamped to the row's last LIVE page.
+
+    ``pl.when`` only skips compute — the BlockSpec index map controls the
+    DMA.  Clamping tail steps to the last live page keeps the block index
+    constant there, which elides the copy: HBM page reads scale with the
+    TRUE context length, not the padded table width."""
+    last = jnp.maximum((lens[b] - 1) // ps, 0)
+    return bt[b, jnp.minimum(ti, last)]
+
+
 def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
             acc_scr, *, scale: float, cap: float, page_size: int,
             n_pages: int):
@@ -76,14 +87,16 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cap", "interpret"))
+    jax.jit, static_argnames=("cap", "scale", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                           cap: float = 0.0, interpret: bool = True):
+                           cap: float = 0.0, scale=None,
+                           interpret: bool = True):
     """q: [B, H, d]; k_pages/v_pages: [P, page_size, K, d] shared pools;
     block_tables: [B, nb] page ids (position p of sequence b lives at
     (block_tables[b, p // ps], p % ps); pad rows with the garbage page 0);
     lengths: [B] true context lengths (0 allowed => zero output).
-    Returns [B, H, d]."""
+    ``scale`` defaults to d**-0.5; the serving path passes 1.0 because the
+    model pre-scales q.  Returns [B, H, d]."""
     B, H, d = q.shape
     P, ps, K = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
     nb = block_tables.shape[1]
@@ -91,9 +104,11 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     qg = q.reshape(B, K, G, d)
     bt = block_tables.astype(jnp.int32)
     lens = lengths.astype(jnp.int32)
+    if scale is None:
+        scale = d ** -0.5
 
     kernel = functools.partial(
-        _kernel, scale=d ** -0.5, cap=cap, page_size=ps, n_pages=nb)
+        _kernel, scale=scale, cap=cap, page_size=ps, n_pages=nb)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                   # block tables + lengths
@@ -101,9 +116,11 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
         in_specs=[
             pl.BlockSpec((1, 1, G, d), lambda b, h, ti, bt, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, d),
-                         lambda b, h, ti, bt, ln: (bt[b, ti], 0, h, 0)),
+                         lambda b, h, ti, bt, ln: (_live_page(bt, ln, b, ti,
+                                                              ps), 0, h, 0)),
             pl.BlockSpec((1, ps, 1, d),
-                         lambda b, h, ti, bt, ln: (bt[b, ti], 0, h, 0)),
+                         lambda b, h, ti, bt, ln: (_live_page(bt, ln, b, ti,
+                                                              ps), 0, h, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, d),
                                lambda b, h, ti, bt, ln: (b, h, 0, 0)),

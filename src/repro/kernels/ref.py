@@ -73,6 +73,51 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
                      jnp.zeros_like(out))
 
 
+def paged_prefill_attention_ref(q, k, v, k_pages, v_pages, block_tables,
+                                offsets, chunk_lens, *, cap=0.0, scale=None):
+    """Oracle for the ragged paged PREFILL kernel: gather the prefix pages
+    dense, concat the chunk K/V, mask, softmax.
+
+    q: [B, C, H, d] (unscaled unless ``scale`` given); k/v: [B, C, K, d];
+    k_pages/v_pages: [P, ps, K, d]; block_tables: [B, nb]; offsets /
+    chunk_lens: [B].  Query i of row b attends prefix positions < offsets[b]
+    plus chunk positions j <= i with j < chunk_lens[b].  Rows with offset 0
+    AND chunk_len 0 return exact zeros (matching the kernel's empty
+    accumulator).
+    """
+    B, C, H, d = q.shape
+    K = k.shape[2]
+    G = H // K
+    nb, ps = block_tables.shape[1], k_pages.shape[1]
+    T = nb * ps
+    if scale is None:
+        scale = d ** -0.5
+    k_pre = k_pages[block_tables].reshape(B, T, K, d)
+    v_pre = v_pages[block_tables].reshape(B, T, K, d)
+    kk = jnp.concatenate([k_pre, k], axis=1).astype(jnp.float32)  # [B,T+C,K,d]
+    vv = jnp.concatenate([v_pre, v], axis=1).astype(jnp.float32)
+    kk = jnp.repeat(kk, G, axis=2)                                # [B,T+C,H,d]
+    vv = jnp.repeat(vv, G, axis=2)
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bchd,bthd->bhct", qf, kk)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = offsets[:, None] + jnp.arange(C, dtype=jnp.int32)[None]   # [B, C]
+    kvpos = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T)),
+         qpos], axis=1)                                              # [B,T+C]
+    valid = jnp.concatenate(
+        [jnp.arange(T, dtype=jnp.int32)[None] < offsets[:, None],
+         jnp.arange(C, dtype=jnp.int32)[None] < chunk_lens[:, None]], axis=1)
+    mask = valid[:, None, :] & (kvpos[:, None, :] <= qpos[:, :, None])
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhct,bthd->bchd", p, vv)
+    empty = (offsets == 0) & (chunk_lens == 0)
+    out = jnp.where(empty[:, None, None, None], 0.0, out)
+    return out.astype(q.dtype)
+
+
 def dequant_ref(q, scale, base=None):
     """Oracle for the fused dequant/delta-accumulate kernel.
 

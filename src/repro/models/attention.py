@@ -159,6 +159,13 @@ def attention_decode(q, k_cache, v_cache, kv_positions, q_positions, *,
 
 # --------------------------------------------------------------------------- #
 # paged decode / chunked prefill (block-table indexed KV pools)
+#
+# ORACLES, not the hot path: the serving engine routes paged attention
+# through the ragged Pallas kernels (kernels.paged_attention /
+# kernels.paged_prefill — HBM reads scale with true context lengths).  The
+# dense gather-based implementations below materialize the whole padded
+# [B, nb*ps, K, dh] context and survive only as the parity ground truth
+# (ModelRuntime.use_pallas=False; tests/test_ragged_serving.py).
 # --------------------------------------------------------------------------- #
 def gather_pages(pool, block_tables):
     """pool: [P, ps, K, dh]; block_tables: [B, nb] -> [B, nb*ps, K, dh].

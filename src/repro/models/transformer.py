@@ -225,22 +225,48 @@ def _attn_apply(p, h, cfg: ModelConfig, rt: ModelRuntime, mixer: str,
         bt = paged["block_tables"]                       # [B, nb]
         ps = cache["k_pages"].shape[1]
         nb = bt.shape[1]
+        # rt.use_pallas routes the serving hot path through the ragged
+        # Pallas kernels (interpret mode off-TPU, so CPU CI runs the
+        # IDENTICAL kernel); the dense gather_pages implementations in
+        # attention.py stay as the parity oracles, not the hot path.
+        # q is already scaled by dh**-0.5 above, so the kernels get
+        # scale=1.0.
         if mode == "decode":
             pos = positions[:, 0]                        # [B]
             page = jnp.take_along_axis(
                 bt, jnp.minimum(pos // ps, nb - 1)[:, None], axis=1)[:, 0]
             ck = paged_write(cache["k_pages"], k[:, 0], page, pos % ps)
             cv = paged_write(cache["v_pages"], v[:, 0], page, pos % ps)
-            out = attention_paged_decode(q, ck, cv, bt, pos,
-                                         cap=cfg.attn_softcap)
+            if rt.use_pallas:
+                from repro.kernels.ops import on_tpu
+                from repro.kernels.paged_attention import \
+                    paged_decode_attention
+                # true per-slot lengths: the engine's device-resident
+                # ``pos`` buffer (SlotState.ctx_len mirror) — HBM reads
+                # scale with live context, not the padded table width
+                out = paged_decode_attention(
+                    q[:, 0], ck, cv, bt, pos + 1, cap=cfg.attn_softcap,
+                    scale=1.0, interpret=not on_tpu())[:, None]
+            else:
+                out = attention_paged_decode(q, ck, cv, bt, pos,
+                                             cap=cfg.attn_softcap)
         else:                                            # prefill chunk
             offs0 = paged["q_offsets"]                   # [B]
             C = k.shape[1]
             if lens is None:
                 lens = jnp.full((B,), C, jnp.int32)
-            out = attention_paged_prefill(
-                q, k, v, cache["k_pages"], cache["v_pages"], bt, offs0, lens,
-                cap=cfg.attn_softcap)
+            if rt.use_pallas:
+                from repro.kernels.ops import on_tpu
+                from repro.kernels.paged_prefill import \
+                    paged_prefill_attention
+                out = paged_prefill_attention(
+                    q, k, v, cache["k_pages"], cache["v_pages"], bt, offs0,
+                    lens, cap=cfg.attn_softcap, scale=1.0,
+                    interpret=not on_tpu())
+            else:
+                out = attention_paged_prefill(
+                    q, k, v, cache["k_pages"], cache["v_pages"], bt, offs0,
+                    lens, cap=cfg.attn_softcap)
             pos_grid = offs0[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
             validc = jnp.arange(C, dtype=jnp.int32)[None] < lens[:, None]
             pages = jnp.take_along_axis(

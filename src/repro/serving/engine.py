@@ -24,7 +24,13 @@ per-slot state (ring buffers, SSM states, sampling buffers) is bounded by
     every sibling — group rollout does 1 prompt prefill instead of G;
   * admits by capacity (``AdmissionError``), not by a slab-length assert:
     responses may grow past any fixed slab because the pool allocates (and,
-    if needed, grows) pages on demand.
+    if needed, grows) pages on demand;
+  * attends through the ragged paged Pallas kernels by default
+    (``use_pallas``; interpret mode off-TPU, so CPU CI runs the identical
+    kernel): decode streams only each slot's live pages (lengths = the
+    device-resident ``pos`` buffer) and chunked prefill streams only live
+    prefix pages + the causal chunk — the dense ``gather_pages`` oracle
+    path survives for parity testing only.
 
 Horizon contract: before each fused dispatch the host reserves the whole
 write window [ctx_len, ctx_len + H) per active slot in one allocator call
@@ -48,6 +54,8 @@ Token-level semantics needed by RLBoost:
 
 from __future__ import annotations
 
+import dataclasses
+import os
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -63,7 +71,19 @@ from repro.models.transformer import (CPU_RT, forward, logits_from_hidden)
 from repro.rl.sampler import sample_token
 
 _JIT_CACHE: Dict = {}
-_JIT_STATS = {"compiles": 0, "padded_reuse": 0}
+_JIT_STATS = {"compiles": 0, "padded_reuse": 0, "chunk_pad_reuse": 0}
+
+# prefill chunks are right-padded up to a multiple of the kernel query tile,
+# so the ragged prefill kernel always lands on a compiled [*, C] grid (and
+# the closure-cache holds a handful of C values instead of every power of 2)
+PREFILL_TILE = 128
+
+
+def _serve_pallas_default() -> bool:
+    """Serving hot-path default: the ragged Pallas kernels (interpret mode
+    off-TPU).  ``RLBOOST_SERVE_PALLAS=0`` forces the dense gather_pages
+    oracle path (parity tests / debugging)."""
+    return os.environ.get("RLBOOST_SERVE_PALLAS", "1") != "0"
 
 # parked in the device token buffer for empty / finished rows — a finished
 # row's stale last token must never leak into a reused batch row
@@ -81,9 +101,16 @@ def _bucket(n: int, minimum: int = 16) -> int:
     return b
 
 
+def _tile_bucket(n: int, tile: int = PREFILL_TILE) -> int:
+    """Round ``n`` up to a multiple of ``tile`` (kernel-grid friendly)."""
+    return max(tile, -(-n // tile) * tile)
+
+
 def jit_cache_stats() -> Dict[str, int]:
-    """Compile-churn counters (regression-tested): total closures compiled
-    and block-table-width lookups served by a wider already-compiled one."""
+    """Compile-churn counters (regression-tested): total closures compiled,
+    block-table-width lookups served by a wider already-compiled one
+    (``padded_reuse``), and prefill dispatches whose 128-tile-bucketed
+    chunk width reused an existing closure (``chunk_pad_reuse``)."""
     return dict(_JIT_STATS, entries=len(_JIT_CACHE))
 
 
@@ -104,17 +131,18 @@ def _padded_width(family: Tuple, needed: int) -> Optional[int]:
 # jitted stages (cache keyed on the temperature VALUE — two engines with
 # different positive temperatures must not share compiled closures)
 # --------------------------------------------------------------------------- #
-def _prefill_family(cfg: ModelConfig, n: int, C: int) -> Tuple:
-    return ("prefill", cfg.name, cfg.d_model, n, C)
+def _prefill_family(cfg: ModelConfig, n: int, C: int,
+                    use_pallas: bool) -> Tuple:
+    return ("prefill", cfg.name, cfg.d_model, n, C, use_pallas)
 
 
-def _get_prefill_fn(cfg: ModelConfig, n: int, C: int, nb: int):
+def _get_prefill_fn(cfg: ModelConfig, rt, n: int, C: int, nb: int):
     """Batched chunk prefill: n rows of C tokens against paged prefixes."""
-    key = _prefill_family(cfg, n, C) + (nb,)
+    key = _prefill_family(cfg, n, C, rt.use_pallas) + (nb,)
     if key not in _JIT_CACHE:
         def fn(params, cache, slot_idx, tokens, mask, offsets, bt):
             rows = kvc.gather_rows(cache, slot_idx)
-            out = forward(params, cfg, CPU_RT, tokens=tokens, seq_mask=mask,
+            out = forward(params, cfg, rt, tokens=tokens, seq_mask=mask,
                           cache=rows, mode="prefill",
                           paged={"block_tables": bt, "q_offsets": offsets})
             cache = kvc.scatter_rows(cache, out["cache"], slot_idx)
@@ -129,12 +157,13 @@ def _get_prefill_fn(cfg: ModelConfig, n: int, C: int, nb: int):
     return _JIT_CACHE[key]
 
 
-def _decode_family(cfg: ModelConfig, temperature: float,
-                   horizon: int) -> Tuple:
-    return ("decode", cfg.name, cfg.d_model, temperature, horizon)
+def _decode_family(cfg: ModelConfig, temperature: float, horizon: int,
+                   use_pallas: bool = True) -> Tuple:
+    return ("decode", cfg.name, cfg.d_model, temperature, horizon,
+            use_pallas)
 
 
-def _get_decode_fn(cfg: ModelConfig, nb: int, temperature: float,
+def _get_decode_fn(cfg: ModelConfig, rt, nb: int, temperature: float,
                    horizon: int):
     """Fused decode horizon: ``horizon`` tokens per dispatch in one scan.
 
@@ -147,7 +176,7 @@ def _get_decode_fn(cfg: ModelConfig, nb: int, temperature: float,
     ``TOKEN_SENTINEL``.  Outputs are [B, H] token / logprob matrices plus
     the [B, H] emission mask (row was active at that step).
     """
-    key = _decode_family(cfg, temperature, horizon) + (nb,)
+    key = _decode_family(cfg, temperature, horizon, rt.use_pallas) + (nb,)
     if key not in _JIT_CACHE:
         t = temperature if temperature > 0 else 1.0
 
@@ -157,7 +186,7 @@ def _get_decode_fn(cfg: ModelConfig, nb: int, temperature: float,
                 old_pos = cache["pos"]
                 bt_step = jnp.where(active[:, None], bt,
                                     jnp.int32(GARBAGE_PAGE))
-                out = forward(params, cfg, CPU_RT, tokens=tokens,
+                out = forward(params, cfg, rt, tokens=tokens,
                               cache=cache, mode="decode",
                               paged={"block_tables": bt_step})
                 logits = logits_from_hidden(params, cfg, out["hidden"][:, 0])
@@ -250,7 +279,7 @@ class InferenceEngine:
                  slab_len: int = 256, temperature: float = 1.0,
                  weight_version: int = 0, page_size: int = 16,
                  prefill_chunk: int = 256, max_context: Optional[int] = None,
-                 horizon: int = 1):
+                 horizon: int = 1, use_pallas: Optional[bool] = None):
         """``slab_len`` sizes the initial pool (max_batch * slab_len tokens)
         and the local-attention ring width; unlike the old dense slab it is
         NOT a hard length cap — pages are allocated (and the pool grown) on
@@ -259,9 +288,19 @@ class InferenceEngine:
         ``horizon`` is the number of tokens one ``step()`` decodes per
         active request inside a single fused dispatch (H = 1 reproduces
         per-token stepping bit-exactly; larger H amortizes the per-dispatch
-        host<->device cost over H tokens)."""
+        host<->device cost over H tokens).
+
+        ``use_pallas`` selects the attention hot path: True (the default,
+        overridable via ``RLBOOST_SERVE_PALLAS=0``) runs the ragged paged
+        Pallas kernels — decode and chunked prefill both read only live KV
+        pages, in interpret mode off-TPU; False keeps the dense
+        gather_pages oracle path (bit-parity testing)."""
         self.cfg = cfg
         self.params = params
+        if use_pallas is None:
+            use_pallas = _serve_pallas_default()
+        self.use_pallas = bool(use_pallas)
+        self.rt = dataclasses.replace(CPU_RT, use_pallas=self.use_pallas)
         self.weight_version = weight_version
         self.max_batch = max_batch
         self.slab_len = slab_len
@@ -470,10 +509,11 @@ class InferenceEngine:
         needed = max((len(s.table) for s in self.slots if s is not None),
                      default=1)
         if self._bt_dirty or self._bt_dev is None or self._bt_width < needed:
-            family = _decode_family(self.cfg, self.temperature, self.horizon)
+            family = _decode_family(self.cfg, self.temperature, self.horizon,
+                                    self.use_pallas)
             nb = _padded_width(family, needed)
             if nb is None:
-                nb = _bucket(needed, minimum=4)
+                nb = _bucket(needed, minimum=8)
             else:
                 _JIT_STATS["padded_reuse"] += 1
             bt = np.full((self.max_batch, nb), GARBAGE_PAGE, np.int32)
@@ -508,7 +548,8 @@ class InferenceEngine:
             self.cache = fn(self.cache, jnp.asarray(src), jnp.asarray(dst))
         bt = self._device_block_tables()
         self._sync_device_state()
-        fn = _get_decode_fn(self.cfg, bt.shape[1], self.temperature, H)
+        fn = _get_decode_fn(self.cfg, self.rt, bt.shape[1],
+                            self.temperature, H)
         (self.cache, self._dev_tokens, self._dev_active,
          toks, lps, em) = fn(self.params, self.cache, self._dev_tokens,
                              self._dev_keys, self._dev_active,
@@ -557,18 +598,25 @@ class InferenceEngine:
             budget -= take
         n_rows = len(chosen)
         n = _bucket(n_rows, minimum=1)
-        C = _bucket(max(take for _, _, take in chosen))
+        # chunk width buckets to kernel-tile multiples (128): the ragged
+        # prefill kernel always hits a compiled [n, C] grid, and short
+        # chunks of many widths reuse ONE closure (counted below)
+        max_take = max(take for _, _, take in chosen)
+        C = _tile_bucket(max_take)
         toks = np.zeros((n, C), np.int32)
         mask = np.zeros((n, C), np.float32)
         offsets = np.zeros((n,), np.int32)
         slot_idx = np.full((n,), self.max_batch, np.int32)  # OOB => dropped
         widths = [len(row.table) for row, _, _ in chosen]
         needed = max(widths)
-        nb = _padded_width(_prefill_family(self.cfg, n, C), needed)
+        family = _prefill_family(self.cfg, n, C, self.use_pallas)
+        nb = _padded_width(family, needed)
         if nb is None:
-            nb = _bucket(needed, minimum=4)
+            nb = _bucket(needed, minimum=8)
         else:
             _JIT_STATS["padded_reuse"] += 1
+        if C > max_take and family + (nb,) in _JIT_CACHE:
+            _JIT_STATS["chunk_pad_reuse"] += 1
         bt = np.full((n, nb), GARBAGE_PAGE, np.int32)
         for i, (row, start, take) in enumerate(chosen):
             toks[i, :take] = row.token_ids[start:start + take]
@@ -576,7 +624,7 @@ class InferenceEngine:
             offsets[i] = start
             slot_idx[i] = row.members[0][4]     # owner slot's state rows
             bt[i, :len(row.table)] = row.table
-        fn = _get_prefill_fn(self.cfg, n, C, nb)
+        fn = _get_prefill_fn(self.cfg, self.rt, n, C, nb)
         self.cache, logits = fn(self.params, self.cache,
                                 jnp.asarray(slot_idx), jnp.asarray(toks),
                                 jnp.asarray(mask), jnp.asarray(offsets),

@@ -20,7 +20,7 @@ from repro.models import init_params
 from repro.rl.sampler import request_key
 from repro.serving.engine import (_JIT_CACHE, InferenceEngine,
                                   TOKEN_SENTINEL, _decode_family,
-                                  jit_cache_stats)
+                                  _serve_pallas_default, jit_cache_stats)
 
 _CFG = get_config("qwen2-7b").reduced(
     n_layers=2, n_heads=2, n_kv_heads=1, d_model=32, head_dim=16, d_ff=64,
@@ -249,7 +249,7 @@ def test_jit_cache_padded_width_reuse():
     compile a narrower closure — the wider one is padded up to."""
     temp = 0.7310001                        # unique closure family
     H = 2
-    family = _decode_family(_CFG, temp, H)
+    family = _decode_family(_CFG, temp, H, _serve_pallas_default())
     n_family = lambda: sum(1 for k in _JIT_CACHE if k[:-1] == family)
     assert n_family() == 0
 

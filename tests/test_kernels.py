@@ -10,6 +10,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.paged_prefill import paged_prefill_attention
 from repro.kernels.ssd_scan import ssd_scan
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
@@ -90,6 +91,65 @@ def test_paged_decode_attention(B, H, K, ps, nb, d, cap, dtype):
     assert err <= tol, err
     if lens[0] == 0:
         assert float(jnp.abs(out[0]).max()) == 0.0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,C,H,K,ps,nb,d,cap", [
+    (4, 32, 4, 2, 8, 6, 16, 0.0),            # GQA, single q block
+    (2, 128, 4, 4, 16, 4, 32, 0.0),          # MHA, one 128-tile
+    (3, 256, 2, 1, 8, 8, 32, 30.0),          # MQA + softcap, 2 q blocks
+])
+def test_paged_prefill_attention(B, C, H, K, ps, nb, d, cap, dtype):
+    """Ragged paged prefill kernel vs the gather+concat oracle: offsets at
+    0 / mid-page / page boundary / full table, chunk_lens at 0 / full /
+    ragged tails."""
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.PRNGKey(17), 5)
+    q = jax.random.normal(ks[0], (B, C, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, C, K, d), dtype)
+    v = jax.random.normal(ks[2], (B, C, K, d), dtype)
+    kp = jax.random.normal(ks[3], (P, ps, K, d), dtype)
+    vp = jax.random.normal(ks[4], (P, ps, K, d), dtype)
+    perm = np.random.RandomState(2).permutation(P - 1)[:B * nb] + 1
+    bt = jnp.asarray(perm.reshape(B, nb), jnp.int32)
+    offs = np.asarray(([0, ps // 2 + 1, ps, nb * ps])[:B], np.int32)
+    cls = np.asarray(([0, C, C - 3, max(C // 2, 1)])[:B], np.int32)
+    out = paged_prefill_attention(q, k, v, kp, vp, bt, jnp.asarray(offs),
+                                  jnp.asarray(cls), cap=cap, interpret=True)
+    want = ref.paged_prefill_attention_ref(q, k, v, kp, vp, bt,
+                                           jnp.asarray(offs),
+                                           jnp.asarray(cls), cap=cap)
+    tol = 1e-2 if dtype == jnp.bfloat16 else TOL[dtype]
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    assert err <= tol, err
+    if offs[0] == 0 and cls[0] == 0:
+        assert float(jnp.abs(out[0]).max()) == 0.0
+
+
+def test_paged_prefill_matches_dense_model_oracle():
+    """Kernel == attention_paged_prefill (the dense serving oracle) on the
+    valid chunk positions, with the model's pre-scaled queries."""
+    from repro.models.attention import attention_paged_prefill
+    B, C, H, K, ps, nb, d = 3, 64, 4, 2, 8, 5, 16
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.PRNGKey(23), 5)
+    q = jax.random.normal(ks[0], (B, C, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, C, K, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, C, K, d), jnp.float32)
+    kp = jax.random.normal(ks[3], (P, ps, K, d), jnp.float32)
+    vp = jax.random.normal(ks[4], (P, ps, K, d), jnp.float32)
+    perm = np.random.RandomState(6).permutation(P - 1)[:B * nb] + 1
+    bt = jnp.asarray(perm.reshape(B, nb), jnp.int32)
+    offs = jnp.asarray([0, 7, 3 * ps], jnp.int32)
+    cls = jnp.asarray([C, C - 9, C // 2], jnp.int32)
+    qs = q * (d ** -0.5)
+    out = paged_prefill_attention(qs, k, v, kp, vp, bt, offs, cls,
+                                  scale=1.0, interpret=True)
+    want = attention_paged_prefill(qs, k, v, kp, vp, bt, offs, cls, cap=0.0)
+    valid = (jnp.arange(C)[None] < cls[:, None])[:, :, None, None]
+    err = float(jnp.abs((out - want) * valid).max())
+    assert err <= 2e-5, err
 
 
 def test_paged_matches_dense_decode_attention():

@@ -1,0 +1,228 @@
+"""Ragged Pallas serving hot-path parity tests (PR 5).
+
+The engine's default attention path is the ragged paged Pallas kernels
+(``use_pallas=True``, interpret mode on CPU); the dense gather_pages
+implementations in ``models.attention`` survive only as oracles.  Everything
+here proves the two paths are token/logprob/version-span identical at the
+ENGINE level — across prefix sharing (``add_group``), chunked prefill,
+KV-migration import, weight swaps, and H in {1, 8} — and that the hot path
+never touches ``gather_pages``.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import tokenizer as tok
+from repro.models import init_params
+from repro.rl.sampler import request_key
+from repro.serving.engine import InferenceEngine, jit_cache_stats
+
+_CFG = get_config("qwen2-7b").reduced(
+    n_layers=2, n_heads=2, n_kv_heads=1, d_model=32, head_dim=16, d_ff=64,
+    vocab_size=tok.VOCAB_SIZE, name="tiny-ragged")
+_PARAMS = init_params(_CFG, jax.random.PRNGKey(0))
+
+
+def _mk(use_pallas, horizon=1, cfg=_CFG, params=_PARAMS, **kw):
+    eng_kw = dict(max_batch=4, slab_len=64, page_size=8, temperature=1.0,
+                  horizon=horizon, use_pallas=use_pallas)
+    eng_kw.update(kw)
+    return InferenceEngine(cfg, params, **eng_kw)
+
+
+def _run(eng, reqs, *, max_steps=200):
+    """reqs: [(rid, prompt, max_total, key)] -> {rid: [(tok, lp, ver)]}."""
+    for rid, prompt, max_total, key in reqs:
+        eng.add_request(rid, prompt, key, max_total, len(prompt))
+    return _drain(eng, [r[0] for r in reqs], max_steps=max_steps)
+
+
+def _drain(eng, rids, *, max_steps=200):
+    out = {rid: [] for rid in rids}
+    done = set()
+    for _ in range(max_steps):
+        if len(done) == len(rids):
+            break
+        for e in eng.step():
+            out[e.req_id].append((e.token, e.logprob, e.weight_version))
+            if e.finished:
+                done.add(e.req_id)
+    assert len(done) == len(rids), "requests did not finish"
+    return out
+
+
+def _assert_streams_equal(out, ref):
+    for rid in ref:
+        assert [t for t, _, _ in out[rid]] == [t for t, _, _ in ref[rid]], rid
+        np.testing.assert_allclose([lp for _, lp, _ in out[rid]],
+                                   [lp for _, lp, _ in ref[rid]], atol=1e-4)
+        assert ([v for _, _, v in out[rid]]
+                == [v for _, _, v in ref[rid]]), rid
+
+
+# --------------------------------------------------------------------------- #
+# decode + prefill parity
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("horizon", [1, 8])
+def test_ragged_vs_dense_bit_exact(horizon):
+    """Concurrent ragged-length requests: Pallas(interpret) == dense oracle
+    tokens/logprobs, including rows finishing mid-horizon."""
+    p1, p2, p3 = (tok.encode(s) for s in ["12+34=", "7*8=", "9-4="])
+    reqs = [(1, p1, len(p1) + 11, request_key(7, 1)),
+            (2, p2, len(p2) + 5, request_key(7, 2)),
+            (3, p3, len(p3) + 17, request_key(7, 3))]
+    ref = _run(_mk(False, horizon), reqs)
+    out = _run(_mk(True, horizon), reqs)
+    _assert_streams_equal(out, ref)
+
+
+def test_ragged_group_prefix_sharing():
+    """GRPO group under H = 8: COW prompt pages decode through the ragged
+    kernel identically to the dense oracle, and all pages are freed."""
+    prompt = tok.encode("25*4=")
+    members = [(i, request_key(3, i), len(prompt) + 4 * (i + 1))
+               for i in range(3)]
+
+    def run_group(use_pallas):
+        eng = _mk(use_pallas, 8, page_size=4)
+        free0 = eng.alloc.n_free
+        eng.add_group(members, prompt, len(prompt))
+        out = _drain(eng, [m[0] for m in members])
+        assert eng.alloc.n_free == free0
+        return out
+
+    _assert_streams_equal(run_group(True), run_group(False))
+
+
+def test_ragged_chunked_prefill():
+    """A prompt split across several prefill chunks: every chunk's queries
+    attend the paged prefix through the ragged prefill kernel; streams match
+    the dense path exactly."""
+    long_prompt = [tok.BOS] + (tok.encode("12+34=56") * 6)   # 49 tokens
+    key = request_key(9, 5)
+    reqs = [(5, long_prompt, len(long_prompt) + 9, key)]
+    kw = dict(prefill_chunk=16, page_size=4)     # 4 chunks, offsets mid-page
+    ref = _run(_mk(False, 4, **kw), reqs)
+    out = _run(_mk(True, 4, **kw), reqs)
+    assert len(ref[5]) == 9              # ran to its max_total budget
+    _assert_streams_equal(out, ref)
+
+
+def test_ragged_softcap_parity():
+    """attn_softcap routes through the kernels' cap*tanh(s/cap) path."""
+    cfg = _CFG.reduced(attn_softcap=30.0, name="tiny-ragged-cap")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompt = tok.encode("6*7=")
+    reqs = [(1, prompt, len(prompt) + 8, request_key(21, 1))]
+    ref = _run(_mk(False, 4, cfg=cfg, params=params), reqs)
+    out = _run(_mk(True, 4, cfg=cfg, params=params), reqs)
+    _assert_streams_equal(out, ref)
+
+
+# --------------------------------------------------------------------------- #
+# migration + weight swaps
+# --------------------------------------------------------------------------- #
+def test_ragged_kv_import_bit_exact():
+    """Imported KV pages decode through the ragged kernel with zero extra
+    copies: export mid-generation from a ragged engine, import into another
+    ragged engine, and the joined stream equals the dense uninterrupted
+    run (version spans included)."""
+    prompt = tok.encode("9*8=")
+    key = request_key(5, 31)
+    max_total = len(prompt) + 13
+    ref = _run(_mk(False, 1), [(31, prompt, max_total, key)])
+
+    engA = _mk(True, 4)
+    engA.add_request(31, prompt, key, max_total, len(prompt))
+    part = []
+    for _ in range(2):                       # prefill + 1 fused horizon
+        for e in engA.step():
+            part.append((e.token, e.logprob, e.weight_version))
+    state = engA.export_request_state([31])
+    engA.drop_request(31)
+
+    engB = _mk(True, 4)
+    engB.import_request_state(state)
+    assert engB.n_prefill_tokens == 0        # zero-recompute resume
+    rest = _drain(engB, [31])
+    joined = {31: part + rest[31]}
+    _assert_streams_equal(joined, ref)
+
+
+def test_ragged_swap_weights_version_spans():
+    """A weight swap at a horizon boundary: both paths stamp the identical
+    version spans and continue with identical tokens."""
+    params2 = init_params(_CFG, jax.random.PRNGKey(9))
+    prompt = tok.encode("7-9=")
+    key = request_key(2, 4)
+    max_total = len(prompt) + 9
+
+    def run(use_pallas):
+        eng = _mk(use_pallas, 4)
+        eng.add_request(4, prompt, key, max_total, len(prompt))
+        stream, steps = [], 0
+        while 4 in eng.active_request_ids():
+            if steps == 2:                   # prefill + one horizon
+                eng.swap_weights(params2, 1)
+            stream.extend((e.token, e.weight_version) for e in eng.step())
+            steps += 1
+        return stream
+
+    out, ref = run(True), run(False)
+    assert out == ref
+    assert sorted(set(v for _, v in out)) == [0, 1]
+
+
+# --------------------------------------------------------------------------- #
+# hot-path discipline + compile-churn counters
+# --------------------------------------------------------------------------- #
+def test_hot_path_never_calls_gather_pages(monkeypatch):
+    """The acceptance criterion, enforced: with a fresh closure family, the
+    ragged engine prefized+decodes end-to-end (groups included) without ever
+    tracing ``attention.gather_pages`` — the dense path still does."""
+    from repro.models import attention as att
+
+    def _bomb(pool, block_tables):
+        raise AssertionError("gather_pages reached the serving hot path")
+
+    monkeypatch.setattr(att, "gather_pages", _bomb)
+    cfg = _CFG.reduced(name="tiny-ragged-nodense")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = tok.encode("3+3=")
+    eng = _mk(True, 4, cfg=cfg, params=params)
+    eng.add_group([(i, request_key(1, i), len(prompt) + 4) for i in range(2)],
+                  prompt, len(prompt))
+    _drain(eng, [0, 1])                      # no AssertionError raised
+
+    dense = _mk(False, 4, cfg=cfg, params=params,
+                temperature=0.5170001)       # fresh dense closure family
+    dense.add_request(9, prompt, request_key(1, 9), len(prompt) + 4,
+                      len(prompt))
+    with pytest.raises(AssertionError, match="hot path"):
+        dense.step()
+
+
+def test_chunk_tile_bucketing_and_pad_reuse():
+    """Prefill chunk widths bucket to 128-tile multiples: two prompts of
+    different (sub-tile) lengths share ONE compiled prefill closure, and the
+    reuse is counted in ``jit_cache_stats()['chunk_pad_reuse']``."""
+    cfg = _CFG.reduced(name="tiny-ragged-tile")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    stats0 = jit_cache_stats()
+    eng = _mk(True, 1, cfg=cfg, params=params)
+    eng.add_request(1, tok.encode("1+1="), request_key(0, 1), 8, 4)
+    eng.step()
+    compiles0 = jit_cache_stats()["compiles"]
+    reuse0 = jit_cache_stats()["chunk_pad_reuse"]
+    eng2 = _mk(True, 1, cfg=cfg, params=params)
+    eng2.add_request(2, tok.encode("12+34=56"), request_key(0, 2), 12, 9)
+    eng2.step()
+    stats = jit_cache_stats()
+    assert stats["chunk_pad_reuse"] > reuse0, "tile pad-up was not counted"
+    # no new prefill closure for the second width
+    assert stats["compiles"] == compiles0, stats
+    assert stats0["entries"] <= stats["entries"]
