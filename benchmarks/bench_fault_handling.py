@@ -1,13 +1,21 @@
 """[Paper Fig 15] Fault-handling strategies when 3 of 6 instances are
 preempted simultaneously at an early (100s) or mid (200s) point of a step:
 token-level migrate vs whole-request recompute — step-time overhead vs the
-no-preemption baseline."""
+no-preemption baseline.
+
+Plus the PR 6 chaos curves: throughput vs injected fault rate (chunk
+corruption p, hard-kill fraction) under a seeded FaultPlan with recurring
+capacity churn.  Every chaos run is gated by the invariant checker
+(exactly-once completion, no stranded work, no leaks), and the
+"degradation stays graceful" CI gate holds the p=0.01 / p=0 throughput
+ratio inside a band."""
 
 import json
 from pathlib import Path
 
 from repro.configs import get_config
 from repro.core import trace as tr
+from repro.core.faults import FaultPlan, check_invariants
 from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
 from repro.core.perfmodel import model_perf_from_cfg
 from benchmarks.common import PAPER_WORKLOAD, emit
@@ -43,6 +51,34 @@ def run(fault_mode: str, preempt_at, seed=6):
     return metrics[0]["step_time"]
 
 
+def chaos_run(corrupt_p: float, hard_frac: float, *, quick: bool,
+              seed: int = 6):
+    """Throughput under a seeded FaultPlan + recurring capacity churn.
+    The invariant checker gates every run: a chaos config that loses,
+    duplicates, or strands a request fails the BENCH, not just a test."""
+    cfg_m = get_config("qwen3-8b")
+    perf = model_perf_from_cfg(cfg_m)
+    plan = FaultPlan(seed=seed, corrupt_p=corrupt_p, prune_p=corrupt_p / 2,
+                     stall_p=0.02, stall_s=2.0,
+                     hard_kill_fraction=hard_frac, grace_s=2.0)
+    wl = dict(n_prompts=16 if quick else 48, group_size=4, prompt_len=512,
+              max_response=4096, mean_response=1200, m_b=16)
+    rc = RunnerConfig(mode="rlboost", seed=seed, t_seed_init=10.0,
+                      length_sigma=0.4, fault_plan=plan, **wl)
+    runner = HybridRunner(rc, perf, model_cfg=cfg_m)
+    # capacity flaps every 8s so preemptions keep striking mid-flight
+    events = [tr.TraceEvent(0.0, 6)]
+    for k in range(200):
+        events.append(tr.TraceEvent(8.0 + 16.0 * k, -2))
+        events.append(tr.TraceEvent(16.0 + 16.0 * k, +2))
+    runner.load_trace(events)
+    metrics = runner.run(n_steps=2 if quick else 3)
+    check_invariants(runner.manager, runner._step_requests)
+    tokens = sum(m["tokens"] for m in metrics)
+    dur = metrics[-1]["t_end"] - metrics[0]["t_start"]
+    return tokens / max(dur, 1e-9), runner.manager.fault_stats.as_dict()
+
+
 def main(quick: bool = False):
     OUT.mkdir(parents=True, exist_ok=True)
     base = run("migrate", None)
@@ -57,6 +93,25 @@ def main(quick: bool = False):
                           reduction=red)
         emit(f"fig15/{label}/migrate_overhead_s", ov_m, red)
         emit(f"fig15/{label}/recompute_overhead_s", ov_r, 0.0)
+
+    # chaos curves: corruption sweep (no hard kills), then hard-kill
+    # sweep at p = 0.01; each point is deterministic given its seed
+    chaos = {"corrupt": {}, "hard_kill": {}, "counters": {}}
+    for p in (0.0, 0.01, 0.05):
+        thr, counters = chaos_run(p, 0.0, quick=quick)
+        chaos["corrupt"][str(p)] = thr
+        chaos["counters"][f"corrupt_p{p}"] = counters
+        emit(f"chaos/throughput_corrupt_p{p}", thr,
+             counters["n_corrupt_chunks"], counters["n_chunk_retries"])
+    for frac in (0.0, 0.5, 1.0):
+        thr, counters = chaos_run(0.01, frac, quick=quick)
+        chaos["hard_kill"][str(frac)] = thr
+        chaos["counters"][f"hard_frac{frac}"] = counters
+        emit(f"chaos/throughput_hardkill_f{frac}", thr,
+             counters["n_hard_preemptions"], counters["n_kv_fallbacks"])
+    emit("chaos/throughput_ratio_p01_vs_p0",
+         chaos["corrupt"]["0.01"] / max(chaos["corrupt"]["0.0"], 1e-9))
+    out["chaos"] = chaos
     (OUT / "fault_handling.json").write_text(json.dumps(out, indent=2))
 
 

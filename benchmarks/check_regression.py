@@ -79,6 +79,17 @@ METRICS = [
      lambda d: [r for r in d["rows"] if r["codec"] == "none"
                 and r["partial"] == 4096][0]["kv_stall_s"],
      dict(direction="both")),
+    # chaos plane (PR 6): degradation stays GRACEFUL.  Both ratios run on
+    # the modeled event clock with seeded fault plans, so they are
+    # deterministic; the bands exist to absorb intentional scheduler-policy
+    # drift in later PRs, not machine noise.  A ratio collapse means fault
+    # recovery started serializing the step (retry storms, lost overlap).
+    ("fault_handling.json", "chaos_throughput_ratio_p01",
+     lambda d: d["chaos"]["corrupt"]["0.01"] / d["chaos"]["corrupt"]["0.0"],
+     dict(rel=0.0, atol=0.15, direction="worse_below")),
+    ("fault_handling.json", "chaos_throughput_ratio_hardkill",
+     lambda d: d["chaos"]["hard_kill"]["1.0"] / d["chaos"]["hard_kill"]["0.0"],
+     dict(rel=0.0, atol=0.30, direction="worse_below")),
 ]
 
 

@@ -66,6 +66,10 @@ class RunnerConfig:
     snapshot_d2h_bw: float = 5.0e10        # weight snapshot to host, B/s
     transfer_gbps_scale: float = 1.0       # scales DCN bw (real-harness pacing)
     decode_horizon: int = 1                # tokens per fused decode dispatch
+    # chaos plane: a seeded core.faults.FaultPlan (None = polite world).
+    # The plan's flap schedule installs on the event loop at construction;
+    # the manager samples preemption grace / fetch outcomes from it.
+    fault_plan: Optional[object] = None
 
 
 class HybridRunner:
@@ -100,7 +104,10 @@ class HybridRunner:
             transfer_fanout=cfg.transfer_fanout,
             decode_horizon=cfg.decode_horizon,
             migration=cfg.migration, kv_codec=cfg.kv_codec,
-            kv_sim_chunks=max(cfg.transfer_chunks // 4, 1))
+            kv_sim_chunks=max(cfg.transfer_chunks // 4, 1),
+            faults=cfg.fault_plan)
+        if cfg.fault_plan is not None:
+            cfg.fault_plan.install(self.loop, self.store.agents)
         self.scheduler = SeedingScheduler(
             n_resv=cfg.n_local_engines * cfg.n_reserved_nodes,
             eta=cfg.eta, t_init=cfg.t_seed_init,
@@ -345,7 +352,9 @@ class HybridRunner:
             t_train=self._t_train, t_train_wait=self._t_train_wait,
             t_remote_wait=t_remote_wait,
             migrations=self.manager.n_migrations,
-            preemptions=self.manager.n_preemptions))
+            restarts=self.manager.n_restarts,
+            preemptions=self.manager.n_preemptions,
+            **self.manager.fault_stats.as_dict()))
         self.scheduler.update(StepStats(
             t_train_wait=self._t_train_wait, t_remote_wait=t_remote_wait,
             t_train=max(self._t_train, 1e-9), t_remote=t_remote,

@@ -64,6 +64,9 @@ class RolloutInstance:
         # served from here, so concurrent migrations (and, in a fuller
         # model, egress of any kind) share its per-chunk bandwidth
         self.nic = TransferAgent(1_000_000 + id, kind.dcn_gbps)
+        # every KVExport this instance published: a hard kill marks them
+        # all dead (the host copy dies with the VM) so holders fall back
+        self.published_exports: List[KVExport] = []
         self.pending: List[Request] = []
         self.executing: Dict[int, Request] = {}
         # KV-page migrations in flight INTO this instance: requests wait
@@ -161,21 +164,39 @@ class RolloutInstance:
         self.alive = False
 
     # ---------------- KV-page migration (source side) ---------------- #
-    def export_kv_requests(self, reqs: List[Request]):
+    def export_kv_requests(self, reqs: List[Request],
+                           budget_s: Optional[float] = None):
         """Publish the KV state of ``reqs`` on the chunk plane (sets
         ``r.kv``).  One :class:`KVExport` per GRPO group, so co-migrating
         siblings ship their shared prompt pages once.  Requests whose
         state is not exportable (still prefilling on the real engine, or
-        no modelable KV in sim) are left to token-history migration."""
+        no modelable KV in sim) are left to token-history migration.
+
+        ``budget_s`` is the remaining preemption grace window: each
+        group's export spends its modeled D2H+publish time
+        (:meth:`ModelPerf.kv_export_time`) from the budget, and a group
+        whose export no longer fits is TRUNCATED — its requests take the
+        re-prefill path (paper-faithful: a spot notice is seconds, not a
+        promise to finish arbitrary copies)."""
         mgr = self.manager
         if mgr.migration == "recompute":
             return
         by_group: Dict[int, List[Request]] = {}
         for r in reqs:
             by_group.setdefault(r.group, []).append(r)
+        remaining = budget_s
         for grp in by_group.values():
+            if remaining is not None:
+                kv_tokens = (sum(r.total_len for r in grp)
+                             - (len(grp) - 1) * grp[0].prompt_len)
+                t = mgr.perf.kv_export_time(self.cfg, kv_tokens)
+                if t > remaining:
+                    mgr.fault_stats.n_export_truncated += 1
+                    continue
+                remaining -= t
             export = self._export_group(grp)
             if export is not None:
+                self.published_exports.append(export)
                 for r in grp:
                     if r.id in export.req_ids:
                         r.kv = export
@@ -256,9 +277,50 @@ class RolloutInstance:
             fetch_fn=export.fetch_fn(),
             fanout=self.manager.transfer_fanout,
             wire_scale=export.wire_scale,
-            on_complete=lambda pull, rec=rec: self._kv_arrived(rec, pull)
-        ).start()
+            on_complete=lambda pull, rec=rec: self._kv_arrived(rec, pull),
+            on_failure=lambda pull, rec=rec: self._kv_failed(rec, pull),
+            faults=self.manager.faults, health=self.manager.peer_health,
+            stats=self.manager.fault_stats).start()
         self._imports.append(rec)
+
+    def cancel_imports_from(self, nic):
+        """Hard-kill ladder, destination side: the source serving ``nic``
+        died, so every in-flight KV pull drawing on it is unrecoverable.
+        Cancel those pulls NOW and requeue their requests through the
+        re-prefill path (without this they'd limp through retries to a
+        late terminal failure while holding executing capacity)."""
+        fallback: List[Request] = []
+        for rec in list(self._imports):
+            if rec["export"].agent is not nic:
+                continue
+            rec["pull"].cancel()
+            self._imports.remove(rec)
+            self._kv_caches.pop(rec["export"].mig_id, None)
+            for r in rec["reqs"]:
+                if self.importing.pop(r.id, None) is not None:
+                    r.kv = None
+                    self.manager.fault_stats.n_kv_fallbacks += 1
+                    fallback.append(r)
+        if fallback:
+            self.pending[0:0] = fallback
+            self._kick()
+
+    def _kv_failed(self, rec: Dict, pull):
+        """KV pull exhausted its retries (flaky/pruned source that is not
+        formally dead): same fallback rung as a cancelled import — the
+        requests re-prefill from their token history."""
+        if rec in self._imports:
+            self._imports.remove(rec)
+        self._kv_caches.pop(rec["export"].mig_id, None)
+        grp = [r for r in rec["reqs"]
+               if self.importing.pop(r.id, None) is not None]
+        for r in grp:
+            r.kv = None
+            self.manager.fault_stats.n_kv_fallbacks += 1
+        if not self.alive or not grp:
+            return
+        self.pending[0:0] = grp
+        self._kick()
 
     def _kv_arrived(self, rec: Dict, pull):
         if rec in self._imports:
@@ -287,6 +349,7 @@ class RolloutInstance:
                 # crash, not silently degrade.
                 for r in grp:
                     r.kv = None
+                    self.manager.fault_stats.n_kv_fallbacks += 1
                 self.pending[0:0] = grp
                 self._kick()
                 return
@@ -317,6 +380,11 @@ class RolloutInstance:
         prefill when the cost model favors it."""
         while self.pending and self._room() > 0:
             r = self.pending.pop(0)
+            if r.kv is not None and r.kv.dead:
+                # source hard-killed while this request waited here: take
+                # the re-prefill fallback before the import path sees it
+                r.kv = None
+                self.manager.fault_stats.n_kv_fallbacks += 1
             if r.kv is not None:
                 grp = [r]
                 for o in list(self.pending):

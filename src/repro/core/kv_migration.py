@@ -48,6 +48,10 @@ class KVExport:
     meta: Optional[Dict] = None   # real backend: out-of-band metadata
     blobs: Optional[Dict[str, bytes]] = None   # real backend: payload
     wire_scale: float = 1.0       # payload bytes -> modeled wire bytes
+    # hard-killed source: the host copy died with the VM — every request
+    # still holding this export must take the re-prefill fallback, and
+    # every in-flight pull drawing on ``agent`` must cancel
+    dead: bool = False
 
     def fetch_fn(self):
         return self.blobs.get if self.blobs is not None else None

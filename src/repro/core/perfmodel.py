@@ -150,6 +150,18 @@ class ModelPerf:
         negligible at paper scale)."""
         return self.kv_bytes_per_token(cfg) * float(ctx_tokens)
 
+    def kv_export_time(self, cfg, ctx_tokens: float,
+                       d2h_bw: float = 5.0e10) -> float:
+        """Modeled time for the SOURCE to publish one group's KV export
+        (D2H page copy + manifest build/publish control cost).  Against a
+        finite preemption grace window this decides whether a group's
+        export fits or is truncated (the request falls back to re-prefill
+        migration).  Publish control cost is modeled as half the fixed
+        per-migration overhead — the destination-side import bookkeeping
+        is the other half."""
+        return (0.5 * self.migration_overhead_s
+                + self.kv_state_bytes(cfg, ctx_tokens) / max(d2h_bw, 1.0))
+
     def kv_transfer_time(self, src_gbps: float, dst_gbps: float, cfg,
                          ctx_tokens: float,
                          codec_factor: float = 1.0) -> float:

@@ -32,7 +32,8 @@ class Request:
     # (staleness accounting across mid-stream weight swaps / migrations)
     version_spans: List[List[int]] = field(default_factory=list)
     n_generated: int = 0
-    n_migrations: int = 0
+    n_migrations: int = 0           # moves that preserved partial tokens
+    n_restarts: int = 0             # recompute-mode restarts (tokens lost)
     created_at: float = 0.0
     completed_at: Optional[float] = None
     # zero-recompute migration: the source's published KV export (a

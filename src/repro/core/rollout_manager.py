@@ -14,10 +14,12 @@ Responsibilities:
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.events import EventLoop
+from repro.core.faults import FaultPlan, FaultStats, PeerHealth
 from repro.core.instance import RolloutInstance
 from repro.core.load_balancer import LoadBalancer
 from repro.core.perfmodel import InstanceKind, ModelPerf, SPOT_INSTANCE
@@ -43,7 +45,8 @@ class RolloutManager:
                  decode_horizon: int = 1,
                  migration: str = "auto",             # | "kv" | "recompute"
                  kv_codec: str = "none",              # | "int8"
-                 kv_sim_chunks: int = 8):
+                 kv_sim_chunks: int = 8,
+                 faults: Optional[FaultPlan] = None):
         self.loop = loop
         self.perf = perf
         self.store = store
@@ -71,6 +74,16 @@ class RolloutManager:
         self.migration = migration
         self.kv_codec = kv_codec
         self.kv_sim_chunks = max(int(kv_sim_chunks), 1)
+        # chaos plane: one FaultStats + one PeerHealth shared by EVERY pull
+        # this manager (or its instances) creates, so a flaky peer's
+        # failures accumulate across pulls and the whole run's ladder
+        # behavior surfaces in one counter set
+        self.faults = faults
+        self.fault_stats = FaultStats()
+        self.peer_health = PeerHealth(
+            threshold=(faults.blacklist_threshold if faults else 3),
+            probation_s=(faults.probation_s if faults else 30.0),
+            stats=self.fault_stats)
 
         self.instances: Dict[int, RolloutInstance] = {}
         # chunk caches of preempted instances: a restarted instance adopts
@@ -86,7 +99,9 @@ class RolloutManager:
         self.on_complete_cb: Optional[Callable[[Request], None]] = None
         self.spot_seconds = 0.0                  # cost accounting
         self.n_preemptions = 0
-        self.n_migrations = 0
+        self.n_migrations = 0       # partial-preserving moves only
+        self.n_restarts = 0         # recompute-mode restarts (tokens lost)
+        self.n_duplicate_completions = 0   # exactly-once violation counter
         self._lb_running = False
         # KV-page migration accounting
         self._next_mig_id = 1
@@ -129,8 +144,7 @@ class RolloutManager:
         engine = None
         if self.engine_factory is not None:
             engine = self.engine_factory()
-        cache = (self._orphan_caches.pop() if not local
-                 and self._orphan_caches else None)
+        cache = self._adopt_orphan_cache() if not local else None
         inst = RolloutInstance(
             iid, self.loop, kind or self.spot_kind, self.perf, self,
             max_exec=max_exec or self.max_exec, local=local, cfg=self.cfg,
@@ -148,6 +162,19 @@ class RolloutManager:
             self._provision(inst)
         self._ensure_lb()
         return inst
+
+    def _adopt_orphan_cache(self) -> Optional[Dict]:
+        """Pick the orphan cache with the largest digest overlap against
+        the manifest the new instance is about to pull — a blind
+        newest-first pop() can hand a restarted instance a cache full of
+        stale-version (or KV) chunks while a sibling's cache holding the
+        live version's chunks rots in the pool."""
+        if not self._orphan_caches:
+            return None
+        want = set(self.store.manifest(self.compression).digests())
+        best = max(range(len(self._orphan_caches)),
+                   key=lambda i: len(want & set(self._orphan_caches[i])))
+        return self._orphan_caches.pop(best)
 
     def _provision(self, inst: RolloutInstance):
         """Pull-based weight transfer; 'sync' mode waits for the boundary."""
@@ -221,11 +248,28 @@ class RolloutManager:
             else:
                 self._dispatch()
 
+        def failed(pull: ChunkPull):
+            # a chunk exhausted its retry budget on every peer we tried:
+            # re-plan the whole pull from the surviving agents after a
+            # beat (probation windows decay on the event clock, so the
+            # retry naturally prefers whoever is healthy by then)
+            inst.pull = None
+            self.n_chunk_fetches += pull.n_fetched
+            self.fault_stats.n_pull_replans += 1
+            if inst.alive:
+                self.loop.schedule(5.0, lambda: self._retry_pull(inst))
+
         inst.pull = ChunkPull(
             self.loop, self.store.agents, manifest,
             receiver_gbps=inst.kind.dcn_gbps, cache=inst.chunk_cache,
             fetch_fn=self.store.fetch_fn(), fanout=self.transfer_fanout,
-            wire_scale=scale, on_complete=done).start()
+            wire_scale=scale, on_complete=done, on_failure=failed,
+            faults=self.faults, health=self.peer_health,
+            stats=self.fault_stats).start()
+
+    def _retry_pull(self, inst: RolloutInstance):
+        if inst.alive and inst.pull is None:
+            self._start_pull(inst)
 
     def broadcast_sync(self):
         """Synchronized weight push at the step boundary (baseline mode)."""
@@ -235,9 +279,20 @@ class RolloutManager:
         for inst in waiting:
             self._start_pull(inst)
 
-    def preempt(self, inst: RolloutInstance):
+    def preempt(self, inst: RolloutInstance,
+                grace_s: Optional[float] = None):
+        """Reclaim an instance.  ``grace_s`` is the preemption notice the
+        provider gives us: infinite (legacy polite preemption), finite
+        (KV exports publish only while the modeled export time still fits
+        the window), or zero (hard kill — nothing exports, and every blob
+        this host was still serving dies with it).  When a FaultPlan is
+        attached and no explicit grace is given, the plan samples one."""
         if not inst.alive:
             return
+        if grace_s is None:
+            grace_s = (self.faults.preemption_grace()
+                       if self.faults is not None else math.inf)
+        hard = grace_s <= 0.0
         inst.preempt()
         if inst.pull is not None:
             inst.pull.cancel()
@@ -246,27 +301,53 @@ class RolloutManager:
             self._orphan_caches.append(inst.chunk_cache)
         self.spot_seconds += self.loop.now - inst.created_t
         self.n_preemptions += 1
-        if self.fault_mode == "migrate":
+        if hard:
+            # the VM is gone NOW: no export is published, and exports this
+            # host published EARLIER lose their source blobs — cancel every
+            # in-flight pull drawing on its NIC and requeue those requests
+            # through the re-prefill path
+            self.fault_stats.n_hard_preemptions += 1
+            self._kill_source_exports(inst)
+        elif self.fault_mode == "migrate":
             # publish KV exports within the preemption grace window: the
-            # blob map is a host copy, so it stays fetchable after the
-            # engine (and its page pool) are gone
-            inst.export_kv_requests(list(inst.executing.values()))
+            # blob map is a host copy published to a survivable store, so
+            # it stays fetchable after the engine (and its page pool) are
+            # gone
+            inst.export_kv_requests(list(inst.executing.values()),
+                                    budget_s=grace_s)
         victims = inst.drain_all()
         for r in victims:
             if self.fault_mode == "recompute":
-                # token-level collection disabled: lose generated tokens
+                # token-level collection disabled: lose generated tokens.
+                # This is a RESTART, not a migration — nothing is
+                # preserved, so it must not count as one.
                 r.tokens.clear()
                 r.logprobs.clear()
                 r.version_spans.clear()
                 r.n_generated = 0
                 r.kv = None
+                r.n_restarts += 1
+                self.n_restarts += 1
+            else:
+                r.n_migrations += 1
+                self.n_migrations += 1
             r.status = Status.QUEUED
             r.instance_id = None
-            r.n_migrations += 1
-            self.n_migrations += 1
             self.queued.append(r)
         del self.instances[inst.id]
         self._dispatch()
+
+    def _kill_source_exports(self, src: RolloutInstance):
+        """Hard-kill rung of the degradation ladder: every KV export
+        ``src`` ever published dies with its host copy.  Pulls drawing on
+        its NIC cancel immediately (their requests requeue with kv=None);
+        queued/pending requests still holding a dead export fall back
+        lazily at dispatch/admission time."""
+        for e in src.published_exports:
+            e.dead = True
+        for inst in self.instances.values():
+            if inst is not src and inst.alive:
+                inst.cancel_imports_from(src.nic)
 
     def release(self, inst: RolloutInstance):
         """Voluntary shutdown (seeding end / over-provisioning)."""
@@ -313,6 +394,11 @@ class RolloutManager:
             if inst_view is None:
                 return                           # all at Theta — hold
             r = self.queued.pop(0)
+            if r.kv is not None and r.kv.dead:
+                # source hard-killed while this request sat queued: take
+                # the re-prefill fallback (tokens ride in the request)
+                r.kv = None
+                self.fault_stats.n_kv_fallbacks += 1
             batch = [r]
             if r.kv is not None:
                 sibs = [o for o in self.queued if o.kv is r.kv]
@@ -332,6 +418,12 @@ class RolloutManager:
             self.on_token_cb(r)
 
     def on_complete(self, r: Request, inst: RolloutInstance):
+        if r.completed_at is not None:
+            # exactly-once tripwire: a request delivered twice means the
+            # degradation ladder forked it — count (check_invariants
+            # asserts zero) but never re-deliver downstream
+            self.n_duplicate_completions += 1
+            return
         r.status = Status.DONE
         r.completed_at = self.loop.now
         if self.on_complete_cb is not None:

@@ -1,0 +1,433 @@
+"""Chaos plane: fault injection + the degradation ladder (PR 6).
+
+Failure is an input, not an accident: seeded FaultPlans inject hard
+preemptions, corrupt/pruned/stalled chunk fetches, and flapping peers;
+the ladder must absorb every rung — fetch-time integrity + retry,
+blacklist, terminal re-plan, KV-import fallback to re-prefill — while
+the chaos contract holds: every request completes exactly once, no
+allocator page/refcount leaks, token accounting stays exact.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.events import EventLoop
+from repro.core.faults import (ChaosInvariantError, FaultPlan,
+                               check_invariants)
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import (ModelPerf, SPOT_INSTANCE, InstanceKind,
+                                  model_perf_from_cfg)
+from repro.core.requests import Request
+from repro.core.rollout_manager import RolloutManager
+from repro.core.trace import TraceEvent
+from repro.core.weight_transfer import TransferAgent, WeightStore
+from repro.data import tokenizer as tok
+from repro.models import init_params
+from repro.serving.engine import AdmissionError, InferenceEngine
+from repro.transfer.chunkstore import (ChunkIntegrityError, ChunkStore,
+                                       MissingChunkError)
+from repro.transfer.puller import ChunkPull
+
+
+def tiny_params(seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "wte": jax.random.normal(k[0], (37, 16), np.float32),
+        "blocks": [{"w1": jax.random.normal(k[1], (16, 64), np.float32),
+                    "b1": jax.random.normal(k[2], (64,), np.float32)}],
+        "head": jax.random.normal(k[3], (16, 37), np.float32),
+    }
+
+
+def _mk_engine(seed=0, **eng_kw):
+    cfg = get_config("qwen2-7b").reduced(n_heads=2, n_kv_heads=1, d_model=32,
+                                         head_dim=16, d_ff=64,
+                                         vocab_size=tok.VOCAB_SIZE)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    kw = dict(max_batch=4, slab_len=64, temperature=1.0, page_size=8)
+    kw.update(eng_kw)
+    return cfg, params, (lambda: InferenceEngine(cfg, params, **kw))
+
+
+# --------------------------------------------------------------------------- #
+# puller: pruned-blob regression (satellite 1) + terminal failure
+# --------------------------------------------------------------------------- #
+def test_pruned_fetch_reenqueued_until_served():
+    """Regression: a ``payload is None`` fetch used to 'complete' silently
+    with the chunk missing, only failing far downstream at assemble time.
+    A transiently-pruned chunk must retry until the source serves it."""
+    store = ChunkStore(chunk_bytes=1024)
+    p = tiny_params()
+    store.publish(1, p)
+    m = store.manifest(1, "none")
+    target = m.chunks[0].digest
+    calls = {"n": 0}
+
+    def flaky_fetch(d):
+        if d == target:
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                return None              # source pruned / flaky
+        return store.fetch(d)
+
+    loop = EventLoop()
+    agents = [TransferAgent(0, 8.0)]
+    done, failed = [], []
+    pull = ChunkPull(loop, agents, m, receiver_gbps=1e4, cache={},
+                     fetch_fn=flaky_fetch, fanout=2, wire_scale=1e6,
+                     on_complete=done.append, on_failure=failed.append
+                     ).start()
+    loop.run()
+    assert done and not failed and not pull.failed
+    assert pull.n_pruned == 2 and pull.n_retries >= 2
+    assert set(m.digests()) <= set(pull.cache)
+    assert agents[0].active_pulls == 0
+    out = store.assemble(m, pull.cache, like=p)     # no MissingChunkError
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_permanently_pruned_chunk_takes_terminal_on_failure():
+    store = ChunkStore(chunk_bytes=1024)
+    p = tiny_params()
+    store.publish(1, p)
+    m = store.manifest(1, "none")
+    target = m.chunks[0].digest
+
+    def dead_fetch(d):
+        return None if d == target else store.fetch(d)
+
+    loop = EventLoop()
+    agents = [TransferAgent(0, 8.0)]
+    done, failed = [], []
+    pull = ChunkPull(loop, agents, m, receiver_gbps=1e4, cache={},
+                     fetch_fn=dead_fetch, fanout=2, wire_scale=1e6,
+                     max_retries=2, on_complete=done.append,
+                     on_failure=failed.append).start()
+    loop.run()
+    assert failed == [pull] and not done and pull.failed
+    assert pull.n_pruned == 3              # initial attempt + 2 retries
+    assert pull.stats.n_chunk_failures == 1
+    assert target not in pull.cache
+    assert agents[0].active_pulls == 0
+
+
+def test_legacy_owner_without_on_failure_keeps_missing_chunk_contract():
+    """Owners that predate the ladder get the old terminal signal: the
+    pull finishes with the chunk absent and reassembly raises."""
+    store = ChunkStore(chunk_bytes=1024)
+    p = tiny_params()
+    store.publish(1, p)
+    m = store.manifest(1, "none")
+    target = m.chunks[0].digest
+    loop = EventLoop()
+    done = []
+    pull = ChunkPull(loop, [TransferAgent(0, 8.0)], m, receiver_gbps=1e4,
+                     cache={}, wire_scale=1e6, max_retries=1,
+                     fetch_fn=lambda d: (None if d == target
+                                         else store.fetch(d)),
+                     on_complete=done.append).start()
+    loop.run()
+    assert done and not pull.failed
+    with pytest.raises(MissingChunkError):
+        store.assemble(m, pull.cache, like=p)
+
+
+# --------------------------------------------------------------------------- #
+# puller: deadlines, blacklist, flapping peers
+# --------------------------------------------------------------------------- #
+def test_flapping_agent_times_out_gets_blacklisted_pull_completes():
+    loop = EventLoop()
+    agents = [TransferAgent(0, 8.0), TransferAgent(1, 8.0)]
+    plan = FaultPlan(seed=0, agent_flaps=((0.0, 0, 600.0),),
+                     deadline_slack_s=0.5, blacklist_threshold=3,
+                     probation_s=1000.0)
+    plan.install(loop, agents)
+    store = ChunkStore(chunk_bytes=1024)
+    p = tiny_params()
+    store.publish(1, p)
+    m = store.manifest(1, "none")
+    done, failed = [], []
+    pull = ChunkPull(loop, agents, m, receiver_gbps=1e4, cache={},
+                     fetch_fn=store.fetch, fanout=2, wire_scale=1e6,
+                     faults=plan, max_retries=8,
+                     on_complete=done.append, on_failure=failed.append
+                     ).start()
+    loop.run(until=500.0)
+    assert done and not failed
+    assert pull.stats.n_deadline_timeouts >= 3
+    assert pull.stats.n_blacklisted_agents >= 1
+    assert pull.health.blacklisted(0, loop.now)
+    assert not pull.health.blacklisted(1, loop.now)
+    assert set(m.digests()) <= set(pull.cache)
+    assert agents[0].active_pulls == 0 and agents[1].active_pulls == 0
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: corrupt chunk in a WEIGHT pull — caught at fetch time,
+# retried, never reaches assemble
+# --------------------------------------------------------------------------- #
+def test_corrupt_weight_pull_detected_at_fetch_never_reaches_assemble():
+    cfg, params, mk = _mk_engine()
+    params2 = jax.tree.map(lambda x: x * 1.01, params)
+    perf = ModelPerf(n_params=1e9, n_active=1e9)
+    loop = EventLoop()
+    store = WeightStore([TransferAgent(0, 400.0), TransferAgent(1, 400.0)],
+                        chunkstore=ChunkStore(chunk_bytes=1 << 12))
+    plan = FaultPlan(seed=3, corrupt_p=0.2)
+    mgr = RolloutManager(loop, perf, store, engine_factory=mk, faults=plan,
+                         max_exec_per_instance=4)
+    store.publish(1, params2)
+    mgr.required_version = 1
+    inst = mgr.allocate()
+    # ChunkIntegrityError here would crash the event loop — its absence IS
+    # the "never reaches assemble" claim
+    loop.run(until=300.0)
+    assert inst.weight_version == 1
+    assert mgr.fault_stats.n_corrupt_chunks > 0
+    assert mgr.fault_stats.n_chunk_retries > 0
+    for a, b in zip(jax.tree.leaves(inst.engine.params),
+                    jax.tree.leaves(params2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# manager-level world with real engines (shared harness)
+# --------------------------------------------------------------------------- #
+def _world(mk_engine, perf, migration="kv"):
+    loop = EventLoop()
+    store = WeightStore([TransferAgent(0, 400.0)],
+                        chunkstore=ChunkStore(chunk_bytes=1 << 12))
+    mgr = RolloutManager(loop, perf, store, engine_factory=mk_engine,
+                         migration=migration, max_exec_per_instance=4)
+    return loop, store, mgr
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: hard preemption of a KV-migration source mid-pull
+# --------------------------------------------------------------------------- #
+def test_hard_preempt_of_kv_source_mid_pull_reprefills_everything():
+    cfg, params, mk = _mk_engine()
+    perf = ModelPerf(n_params=1e9, n_active=1e9)
+    loop, store, mgr = _world(mk, perf, migration="kv")
+    store.publish(1, params)
+    mgr.required_version = 1
+    kind = InstanceKind(SPOT_INSTANCE.name, SPOT_INSTANCE.chips, 50.0)
+    i0 = mgr.allocate(kind=kind)
+    i1 = mgr.allocate(kind=kind)
+    prompts = [tok.encode(p) for p in ["12+34=", "9*8=", "7-5="]]
+    reqs = [Request(id=i, group=i, prompt_len=len(p), max_total=len(p) + 12,
+                    prompt_ids=p, seed=3) for i, p in enumerate(prompts)]
+    done = []
+    mgr.on_complete_cb = done.append
+    loop.run(until=50.0)                       # weight pulls land
+    mgr.submit(reqs)
+    struck = []
+
+    def strike():
+        if struck:
+            return
+        for rid, r in list(i0.executing.items()):
+            if r.n_generated >= 3:
+                struck.append(rid)
+                i0.export_kv_requests([r])
+                assert r.kv is not None
+                i1.assign(i0.take_back(rid))
+                # migration="kv": the import pull is now in flight, drawing
+                # on i0's NIC, with fetch events still in the future
+                assert any(rec["export"].agent is i0.nic
+                           for rec in i1._imports)
+                # the source is hard-killed mid-pull: zero grace, blobs die
+                mgr.preempt(i0, grace_s=0.0)
+                assert r.kv is None            # fallback took the request
+                return
+    mgr.on_token_cb = lambda r: loop.schedule(0.0, strike)
+    loop.run(until=500.0)
+    assert struck
+    assert len(done) == len(reqs)
+    assert mgr.fault_stats.n_hard_preemptions == 1
+    assert mgr.fault_stats.n_kv_fallbacks >= 1
+    assert mgr.n_kv_migrations == 0            # the import never landed
+    # fig16-style integrity: token accounting stays exact through the chaos
+    for r in reqs:
+        assert sum(n for _, n in r.version_spans) == r.n_generated
+    # exactly-once + no stranded work + allocator page/refcount hygiene
+    summary = check_invariants(mgr, reqs)
+    assert summary["n_hard_preemptions"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# the _kv_arrived fallback trio (satellite 4)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("exc_type", [AdmissionError, MissingChunkError,
+                                      ChunkIntegrityError])
+def test_kv_arrived_fallback_trio_reprefills_without_livelock(exc_type):
+    cfg, params, mk = _mk_engine()
+    perf = ModelPerf(n_params=1e9, n_active=1e9)
+    loop, store, mgr = _world(mk, perf, migration="kv")
+    store.publish(1, params)
+    mgr.required_version = 1
+    i0 = mgr.allocate()
+    i1 = mgr.allocate()
+    p = tok.encode("12+34=")
+    r = Request(id=0, group=0, prompt_len=len(p), max_total=len(p) + 10,
+                prompt_ids=p, seed=1)
+    done = []
+    mgr.on_complete_cb = done.append
+    loop.run(until=50.0)
+    mgr.submit([r])
+    moved = []
+
+    def strike():
+        if moved:
+            return
+        for src, dst in [(i0, i1), (i1, i0)]:
+            if r.id in src.executing and r.n_generated >= 3:
+                moved.append(True)
+
+                def raiser(*a, **k):
+                    raise exc_type("injected")
+                dst.engine.import_request_state = raiser
+                src.export_kv_requests([r])
+                dst.assign(src.take_back(r.id))
+                return
+    mgr.on_token_cb = lambda _: loop.schedule(0.0, strike)
+    loop.run(until=500.0)                # livelock would spin past this
+    assert moved and done
+    assert r.kv is None and r.done
+    assert mgr.fault_stats.n_kv_fallbacks == 1
+    assert mgr.n_kv_migrations == 0
+    assert mgr.n_prefill_migrations >= 1
+    check_invariants(mgr, [r])
+
+
+# --------------------------------------------------------------------------- #
+# restarts vs migrations (satellite 2) — sim backend
+# --------------------------------------------------------------------------- #
+def _sim_manager(**kw):
+    loop = EventLoop()
+    store = WeightStore([TransferAgent(0, 400.0)], weight_bytes=8e9,
+                        sim_chunks=4)
+    perf = kw.pop("perf", ModelPerf(n_params=1e9, n_active=1e9))
+    mgr = RolloutManager(loop, perf, store, **kw)
+    return loop, store, mgr
+
+
+@pytest.mark.parametrize("fault_mode", ["migrate", "recompute"])
+def test_restarts_vs_migrations_metric_split(fault_mode):
+    loop, store, mgr = _sim_manager(fault_mode=fault_mode)
+    i0 = mgr.allocate()
+    reqs = [Request(id=i, group=i, prompt_len=16, max_total=64,
+                    target_total=48, seed=0) for i in range(3)]
+    mgr.submit(reqs)
+    fired = []
+
+    def strike(r):
+        if not fired and r.n_generated >= 3:
+            fired.append(True)
+            loop.schedule(0.0, lambda: mgr.preempt(i0))
+    mgr.on_token_cb = strike
+    loop.run(until=300.0)
+    assert fired
+    mgr.allocate()                         # a fresh instance finishes them
+    loop.run(until=3000.0)
+    assert all(r.done for r in reqs)
+    if fault_mode == "recompute":
+        # a token-discarding restart is NOT a migration
+        assert mgr.n_restarts == 3 and mgr.n_migrations == 0
+        assert sum(r.n_restarts for r in reqs) == 3
+        assert sum(r.n_migrations for r in reqs) == 0
+    else:
+        assert mgr.n_migrations == 3 and mgr.n_restarts == 0
+    check_invariants(mgr, reqs)
+
+
+# --------------------------------------------------------------------------- #
+# orphan-cache adoption picks best digest overlap (satellite 3)
+# --------------------------------------------------------------------------- #
+def test_orphan_cache_adoption_prefers_largest_overlap():
+    loop, store, mgr = _sim_manager()
+    want = set(store.manifest("none").digests())
+    good = {d: True for d in want}
+    junk = {f"kvmig:v9:c{i}": True for i in range(12)}   # newest orphan
+    mgr._orphan_caches = [good, junk]
+    # the old blind pop() adopted `junk` and re-fetched everything
+    inst = mgr.allocate()
+    assert inst.chunk_cache is good
+    loop.run(until=5.0)
+    assert inst.pull is None and inst.weight_version == store.version
+    assert mgr.n_chunk_cache_hits == len(want)
+    assert mgr.n_chunk_fetches == 0
+
+
+# --------------------------------------------------------------------------- #
+# export truncation under a finite grace window
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("grace_s,truncated", [(1e-9, True),
+                                               (float("inf"), False)])
+def test_short_grace_truncates_kv_exports(grace_s, truncated):
+    cfg_m = get_config("qwen3-8b")           # real KV bytes in the model
+    loop, store, mgr = _sim_manager(perf=model_perf_from_cfg(cfg_m),
+                                    cfg=cfg_m, migration="kv")
+    i0 = mgr.allocate()
+    reqs = [Request(id=i, group=i // 2, prompt_len=512, max_total=1024,
+                    target_total=800, seed=0) for i in range(4)]
+    mgr.submit(reqs)
+    fired = []
+
+    def strike(r):
+        if not fired and r.n_generated >= 4:
+            fired.append(True)
+            loop.schedule(0.0, lambda: mgr.preempt(i0, grace_s=grace_s))
+    mgr.on_token_cb = strike
+    loop.run(until=600.0)
+    assert fired
+    victims = [r for r in reqs if r.n_generated > 0]
+    if truncated:
+        # every executing group missed the window -> re-prefill path
+        assert mgr.fault_stats.n_export_truncated >= 1
+        assert all(r.kv is None for r in reqs)
+    else:
+        assert mgr.fault_stats.n_export_truncated == 0
+        assert any(r.kv is not None for r in victims)
+    mgr.allocate()
+    loop.run(until=6000.0)
+    assert all(r.done for r in reqs)
+    check_invariants(mgr, reqs)
+
+
+# --------------------------------------------------------------------------- #
+# seeded chaos sweep through the full runtime (satellite 4)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_chaos_sweep_invariants_hold(seed):
+    cfg_m = get_config("qwen3-8b")
+    plan = FaultPlan(seed=seed, corrupt_p=0.02, prune_p=0.01, stall_p=0.02,
+                     stall_s=2.0, hard_kill_fraction=0.5, grace_s=2.0)
+    rc = RunnerConfig(mode="rlboost", n_prompts=8, group_size=4,
+                      mean_response=800, max_response=2048, m_b=8,
+                      seed=seed, t_seed_init=10.0, transfer_chunks=8,
+                      length_sigma=0.4, fault_plan=plan)
+    r = HybridRunner(rc, model_perf_from_cfg(cfg_m), model_cfg=cfg_m)
+    # both steps run ~19s each: keep the capacity churn inside that window
+    r.load_trace([TraceEvent(0.0, 6), TraceEvent(6.0, -3),
+                  TraceEvent(11.0, 3), TraceEvent(16.0, -2),
+                  TraceEvent(22.0, 2), TraceEvent(27.0, -3),
+                  TraceEvent(31.0, 3)])
+    metrics = r.run(n_steps=2)
+    assert len(metrics) == 2
+    summary = check_invariants(r.manager, r._step_requests)
+    assert summary["n_requests"] == rc.n_prompts * rc.group_size
+    assert r.manager.n_preemptions > 0
+    # fault counters surface in the step metrics
+    assert "n_hard_preemptions" in metrics[-1]
+    assert metrics[-1]["restarts"] == r.manager.n_restarts
+
+
+def test_invariant_checker_catches_a_lost_request():
+    loop, store, mgr = _sim_manager()
+    r = Request(id=0, group=0, prompt_len=16, max_total=32, seed=0)
+    with pytest.raises(ChaosInvariantError, match="lost"):
+        check_invariants(mgr, [r])
