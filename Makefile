@@ -24,6 +24,7 @@ bench-smoke:
 	$(PY) -m benchmarks.run --quick --only migration
 	$(PY) -m benchmarks.run --quick --only integrity
 	$(PY) -m benchmarks.run --quick --only fault
+	$(PY) -m benchmarks.run --quick --only obs
 
 bench-migration:
 	$(PY) -m benchmarks.run --quick --only migration

@@ -14,7 +14,7 @@ import json
 from pathlib import Path
 
 from repro.configs import get_config
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from repro.core.faults import FaultPlan, check_invariants
 from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
 from repro.core.perfmodel import model_perf_from_cfg
@@ -48,7 +48,7 @@ def run(fault_mode: str, preempt_at, seed=6):
             runner._reconcile()
         runner.loop.at(preempt_at, strike)
     metrics = runner.run(n_steps=1)
-    return metrics[0]["step_time"]
+    return metrics[0]["step.time_s"]
 
 
 def chaos_run(corrupt_p: float, hard_frac: float, *, quick: bool,
@@ -74,8 +74,8 @@ def chaos_run(corrupt_p: float, hard_frac: float, *, quick: bool,
     runner.load_trace(events)
     metrics = runner.run(n_steps=2 if quick else 3)
     check_invariants(runner.manager, runner._step_requests)
-    tokens = sum(m["tokens"] for m in metrics)
-    dur = metrics[-1]["t_end"] - metrics[0]["t_start"]
+    tokens = sum(m["step.tokens"] for m in metrics)
+    dur = metrics[-1]["step.t_end"] - metrics[0]["step.t_start"]
     return tokens / max(dur, 1e-9), runner.manager.fault_stats.as_dict()
 
 

@@ -1,47 +1,72 @@
 """[Paper Fig 16] Algorithm integrity: REAL tiny-model GRPO reward curves,
 RLBoost hybrid (with preemptions + migration) vs colocated veRL-style.
 Same on-policy GRPO, position-keyed sampling => curves match to gradient
-accumulation-order float noise."""
+accumulation-order float noise.
+
+The rlboost run records into the flight recorder (PR 7): the Perfetto
+trace and the final metrics snapshot are written next to integrity.json
+as CI artifacts, the stall-accounting identity is checked, and the run's
+rollout idle / pull-stall fractions land in integrity.json where
+``check_regression.py`` gates them against the committed baselines.
+"""
 
 import json
 from pathlib import Path
 
 import numpy as np
 
-from repro.core import trace as tr
+from repro import obs
+from repro.core import spot_trace as tr
 from repro.core.hybrid_runtime import RunnerConfig
+from repro.obs.accounting import check_accounting
 from repro.rl.harness import RealRLHarness, tiny_math_config
 
 OUT = Path("experiments/bench")
 
 
-def run(mode: str, trace_events, n_steps: int, seed=11):
+def run(mode: str, trace_events, n_steps: int, seed=11, trace=False):
     cfg = tiny_math_config()
     rc = RunnerConfig(mode=mode, n_prompts=8, group_size=4, m_b=8,
-                      t_seed_init=4.0, seed=seed)
+                      t_seed_init=4.0, seed=seed, trace=trace)
     h = RealRLHarness(cfg, rc, max_new=10, lr=1e-3)
     h.runner.load_trace(trace_events)
     metrics, rewards = h.run(n_steps)
-    return rewards, h.runner.manager.n_migrations, \
-        h.runner.manager.n_preemptions
+    return rewards, metrics, h
 
 
 def main(quick: bool = False):
     OUT.mkdir(parents=True, exist_ok=True)
     n_steps = 4 if quick else 10
     r_colo, _, _ = run("colocated", tr.constant_trace(0), n_steps)
-    # hybrid under preemption churn
+    # hybrid under preemption churn — flight recorder on
     ev = tr.step_trace([(0.0, 4), (40.0, -1), (55.0, +1), (90.0, -1),
                         (100.0, +1)])
-    r_boost, migr, preempt = run("rlboost", ev, n_steps)
+    r_boost, metrics, h = run("rlboost", ev, n_steps, trace=True)
+    migr = h.runner.manager.n_migrations
+    preempt = h.runner.manager.n_preemptions
     gap = float(np.max(np.abs(np.array(r_colo) - np.array(r_boost))))
+    # stall accounting: proven partition of rollout-instance time; the
+    # idle / pull-stall fractions are the scheduler-quality headline
+    # numbers the CI perf gate watches
+    check_accounting(h.runner.manager, tracer=h.runner.tracer,
+                     now=h.runner.loop.now)
+    summ = obs.summarize(metrics)
     out = dict(colocated=r_colo, rlboost=r_boost, max_gap=gap,
-               migrations=migr, preemptions=preempt)
+               migrations=migr, preemptions=preempt,
+               idle_fraction=summ["idle_fraction"],
+               pull_stall_fraction=summ["pull_stall_fraction"])
     (OUT / "integrity.json").write_text(json.dumps(out, indent=2))
+    # CI artifacts: the Perfetto trace + the last step's registry snapshot
+    obs.export_chrome_trace(h.runner.tracer,
+                            OUT / "flight_recorder.trace.json")
+    (OUT / "metrics_snapshot.json").write_text(
+        json.dumps(metrics[-1], indent=2, sort_keys=True))
     from benchmarks.common import emit
     emit("fig16/max_reward_gap", gap, migr, preempt)
     emit("fig16/final_reward_colocated", r_colo[-1])
     emit("fig16/final_reward_rlboost", r_boost[-1])
+    emit("fig16/rollout_idle_fraction", summ["idle_fraction"])
+    emit("fig16/rollout_pull_stall_fraction", summ["pull_stall_fraction"])
     assert gap < 0.25, "reward curves diverged beyond float-noise scale"
 
 

@@ -4,7 +4,7 @@
 import json
 from pathlib import Path
 
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from benchmarks.common import MODELS, PAPER_WORKLOAD, emit, run_system
 
 OUT = Path("experiments/bench")
@@ -17,11 +17,11 @@ def main(quick: bool = False):
     for model in models:
         r = run_system("veRL", model, tr.constant_trace(0), n_steps=2, seed=7)
         m = r["metrics"][-1]
-        train = m["t_train"]
-        rollout = m["step_time"] - train
-        frac = rollout / m["step_time"]
-        out[model] = dict(rollout_frac=frac, step_time=m["step_time"])
-        emit(f"fig2a/{model}/rollout_frac", frac, m["step_time"])
+        train = m["train.t_train_s"]
+        rollout = m["step.time_s"] - train
+        frac = rollout / m["step.time_s"]
+        out[model] = dict(rollout_frac=frac, step_time=m["step.time_s"])
+        emit(f"fig2a/{model}/rollout_frac", frac, m["step.time_s"])
     # (b) rollout scaling: generation throughput vs instance count
     base = None
     for n in [2, 4, 8, 16]:

@@ -1,0 +1,139 @@
+"""Flight-recorder overhead guard + chaos-run trace artifact (PR 7).
+
+Two claims the telemetry plane makes, both checked here so they fail the
+BENCH (and ``make ci``) rather than silently rotting:
+
+  1. **Enabled overhead < 2%**: recording spans around the real engine's
+     decode sweep (two spans per ``step()`` plus the per-token machinery
+     they wrap) costs under 2% wall time vs the null tracer.  Best-of-N
+     minima on both sides — the standard micro-bench stabilizer.
+  2. **Disabled overhead ~ 0**: recording off is the null-object pattern,
+     not an ``if`` per call site — ``NULL_TRACER`` takes the untraced
+     early-return in ``step()`` and constant-time no-ops elsewhere, and
+     records nothing.  Structural check: zero spans buffered.
+
+Plus the 5-seed chaos sweep's flight recording: every seed must pass the
+stall-accounting identity (``check_accounting``), and the last seed's
+trace is exported as a Perfetto artifact under ``experiments/bench/``.
+"""
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import emit
+from repro import obs
+from repro.configs import get_config
+from repro.core.faults import FaultPlan, check_invariants
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import model_perf_from_cfg
+from repro.core.spot_trace import TraceEvent
+from repro.data import tokenizer as tok
+from repro.models import init_params
+from repro.obs.accounting import check_accounting
+from repro.obs.tracer import NULL_TRACER, Tracer
+from repro.rl.sampler import request_key
+from repro.serving.engine import InferenceEngine
+
+OUT = Path("experiments/bench")
+
+
+def _engine_sweep(cfg, params, tracer, *, gen: int) -> float:
+    """Wall seconds for a post-warmup decode sweep on the tiny engine.
+    ``slab_len`` must exceed ``gen`` — a slab-capped request silently
+    shrinks the measured region below what a 2% gate can resolve."""
+    eng = InferenceEngine(cfg, params, max_batch=4, slab_len=1024,
+                          temperature=1.0, page_size=16, horizon=8,
+                          use_pallas=False, tracer=tracer)
+    prompt = tok.encode("12+34=")
+    for i in range(4):
+        eng.add_request(i, prompt, request_key(0, i),
+                        len(prompt) + gen + 1, len(prompt))
+    eng.step()                          # prefill + compile
+    eng.step()                          # compile the fused decode
+    t0 = time.perf_counter()
+    while eng.n_active:
+        eng.step()
+    return max(time.perf_counter() - t0, 1e-9)
+
+
+def overhead(quick: bool) -> dict:
+    cfg = get_config("qwen2-7b").reduced(
+        n_layers=2, n_heads=4, n_kv_heads=2, d_model=64, head_dim=16,
+        d_ff=128, vocab_size=tok.VOCAB_SIZE, name="tiny-obs")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # the sweep must be long enough that a 2% delta clears scheduler
+    # noise; interleaved best-of-N minima cancel slow machine drift
+    gen = 512 if quick else 1000
+    reps = 5
+    _engine_sweep(cfg, params, NULL_TRACER, gen=gen)     # global jit warmup
+    recorder = Tracer(time.perf_counter)
+    # noise only ever inflates a sweep, so the cleanest attempt is the
+    # tightest upper bound on true overhead — retry under transient load
+    # (CI runners share cores) and keep the best of 3
+    ratio = float("inf")
+    t_on = t_off = 0.0
+    for _ in range(3):
+        a_off = a_on = float("inf")
+        for _ in range(reps):
+            a_off = min(a_off,
+                        _engine_sweep(cfg, params, NULL_TRACER, gen=gen))
+            a_on = min(a_on, _engine_sweep(cfg, params, recorder, gen=gen))
+        if a_on / a_off < ratio:
+            ratio, t_on, t_off = a_on / a_off, a_on, a_off
+        if ratio < 1.02:
+            break
+    n_spans = len(recorder.spans())
+    emit("obs/tracer_overhead_ratio", ratio, t_on, t_off)
+    assert n_spans > 0, "enabled tracer recorded nothing"
+    assert NULL_TRACER.spans() == [], "null tracer buffered spans"
+    assert ratio < 1.02, (
+        f"tracer overhead {100 * (ratio - 1):.2f}% >= 2% "
+        f"(on={t_on:.4f}s off={t_off:.4f}s)")
+    return dict(enabled_s=t_on, disabled_s=t_off, ratio=ratio,
+                n_spans=n_spans)
+
+
+def chaos_flight(seed: int, *, quick: bool):
+    """One seeded chaos run with the recorder on; returns the runner."""
+    cfg_m = get_config("qwen3-8b")
+    plan = FaultPlan(seed=seed, corrupt_p=0.02, prune_p=0.01, stall_p=0.02,
+                     stall_s=2.0, hard_kill_fraction=0.5, grace_s=2.0)
+    rc = RunnerConfig(mode="rlboost", n_prompts=8, group_size=4,
+                      mean_response=800, max_response=2048, m_b=8,
+                      seed=seed, t_seed_init=10.0, transfer_chunks=8,
+                      length_sigma=0.4, fault_plan=plan, trace=True)
+    r = HybridRunner(rc, model_perf_from_cfg(cfg_m), model_cfg=cfg_m)
+    r.load_trace([TraceEvent(0.0, 6), TraceEvent(6.0, -3),
+                  TraceEvent(11.0, 3), TraceEvent(16.0, -2),
+                  TraceEvent(22.0, 2), TraceEvent(27.0, -3),
+                  TraceEvent(31.0, 3)])
+    r.run(n_steps=1 if quick else 2)
+    check_invariants(r.manager, r._step_requests)
+    return r
+
+
+def main(quick: bool = False):
+    OUT.mkdir(parents=True, exist_ok=True)
+    ov = overhead(quick)
+
+    seeds = [1, 2, 3, 4, 5]
+    acct = {}
+    runner = None
+    for seed in seeds:
+        runner = chaos_flight(seed, quick=quick)
+        report = check_accounting(runner.manager, tracer=runner.tracer,
+                                  now=runner.loop.now)
+        acct[str(seed)] = report
+        emit(f"obs/chaos_seed{seed}/elapsed_s", report["elapsed_s"],
+             report["idle_s"], report["pull_stall_s"])
+    # the last seed's recording becomes the CI-visible Perfetto artifact
+    obs.export_chrome_trace(runner.tracer, OUT / "chaos_flight.trace.json")
+    (OUT / "obs.json").write_text(json.dumps(
+        dict(overhead=ov, accounting=acct), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,7 @@ on Qwen3-14B under different maximum response lengths (5K..14K)."""
 import json
 from pathlib import Path
 
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from benchmarks.common import PAPER_WORKLOAD, emit, run_system
 
 OUT = Path("experiments/bench")
@@ -23,7 +23,7 @@ def main(quick: bool = False):
                        n_steps=n_steps, seed=4, workload=wl)
         b = run_system("RLBoost", "qwen3-14b", tr.constant_trace(16),
                        n_steps=n_steps, seed=4, workload=wl)
-        n_used = b["metrics"][-1]["n_remote"]
+        n_used = b["metrics"][-1]["rollout.n_remote"]
         v.pop("metrics"); b.pop("metrics")
         rel_t = b["throughput"] / v["throughput"]
         rel_c = b["tokens_per_dollar"] / v["tokens_per_dollar"]

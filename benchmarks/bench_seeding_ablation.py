@@ -8,7 +8,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
 from repro.core.perfmodel import model_perf_from_cfg
 from benchmarks.common import PAPER_WORKLOAD, emit
@@ -46,10 +46,10 @@ def main(quick: bool = False):
     base = None
     for variant in ["full", "no_memory", "no_seeding"]:
         m = run(variant, n_steps)
-        thpt = float(np.mean([x["throughput"] for x in m]))
+        thpt = float(np.mean([x["step.throughput"] for x in m]))
         out[variant] = dict(throughput=thpt,
-                            per_step=[x["throughput"] for x in m],
-                            t_seed=[x["t_seed"] for x in m])
+                            per_step=[x["step.throughput"] for x in m],
+                            t_seed=[x["seed.t_seed"] for x in m])
         if base is None:
             base = thpt
         emit(f"fig12/{variant}", thpt, thpt / base)

@@ -4,7 +4,7 @@ of preemptible rollout instances (0 = colocated fallback)."""
 import json
 from pathlib import Path
 
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from benchmarks.common import emit, run_system
 
 OUT = Path("experiments/bench")

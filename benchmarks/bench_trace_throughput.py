@@ -6,7 +6,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from benchmarks.common import MODELS, emit, run_system
 
 OUT = Path("experiments/bench")

@@ -73,6 +73,17 @@ METRICS = [
      lambda d: d["int8/c64/p4"], dict(direction="both")),
     ("integrity.json", "fig16_max_gap",
      lambda d: d["max_gap"], dict(atol=0.1, direction="worse_above")),
+    # flight recorder (PR 7): the quick fig16 run's stall-accounting
+    # fractions — proven to partition instance time — gate scheduler
+    # quality.  Idle creeping up means remotes starve; pull-stall creeping
+    # up means weight delivery stopped overlapping decode.  Both run on
+    # the modeled event clock (deterministic given the seed).
+    ("integrity.json", "fig16_rollout_idle_fraction",
+     lambda d: d["idle_fraction"],
+     dict(rel=0.30, atol=0.10, direction="worse_above")),
+    ("integrity.json", "fig16_rollout_pull_stall_fraction",
+     lambda d: d["pull_stall_fraction"],
+     dict(rel=0.30, atol=0.05, direction="worse_above")),
     ("migration.json", "kv_migration_speedup_at_4k",
      lambda d: d["speedup_at_4k_none"], dict(direction="worse_below")),
     ("migration.json", "kv_migration_stall_none_p4096",

@@ -7,9 +7,10 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core import costs as C
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
 from repro.core.perfmodel import model_perf_from_cfg
 
@@ -51,8 +52,9 @@ def run_system(system: str, model: str, trace_events, *, duration=None,
     runner.load_trace(trace_events)
     t0 = time.time()
     metrics = runner.run(n_steps=n_steps, duration=duration)
-    dur = metrics[-1]["t_end"] - metrics[0]["t_start"] if metrics else 1.0
-    tokens = sum(m["tokens"] for m in metrics)
+    summ = obs.summarize(metrics)
+    dur = summ.get("duration", 1.0) if metrics else 1.0
+    tokens = summ.get("tokens", 0)
     # cost: reserved nodes the whole duration; spot instance-seconds held.
     # Disagg.BAL's fixed pool is RESERVED capacity (paper: it cannot use
     # preemptible instances) -> bill its instances as on-demand fractions.

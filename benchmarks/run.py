@@ -14,9 +14,10 @@ import traceback
 
 from benchmarks import (bench_engine, bench_fault_handling, bench_integrity,
                         bench_kernels, bench_migration, bench_motivation,
-                        bench_response_length, bench_seeding_ablation,
-                        bench_static_instances, bench_trace_throughput,
-                        bench_transfer, bench_weight_transfer, roofline)
+                        bench_obs, bench_response_length,
+                        bench_seeding_ablation, bench_static_instances,
+                        bench_trace_throughput, bench_transfer,
+                        bench_weight_transfer, roofline)
 
 BENCHES = [
     ("fig2_motivation", bench_motivation.main),
@@ -30,6 +31,7 @@ BENCHES = [
     ("migration", bench_migration.main),
     ("fig15_fault_handling", bench_fault_handling.main),
     ("fig16_integrity", bench_integrity.main),
+    ("obs_flight_recorder", bench_obs.main),
     ("kernels", bench_kernels.main),
     ("roofline", roofline.main),
 ]

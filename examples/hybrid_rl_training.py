@@ -15,7 +15,7 @@ import argparse
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from repro.core.hybrid_runtime import RunnerConfig
 from repro.rl.harness import RealRLHarness, tiny_math_config
 
@@ -67,9 +67,12 @@ def main():
                    meta={"t_seed": h.runner.scheduler.t_seed}, block=True)
         r = rewards[-1] if rewards else 0.0
         m = metrics[-1]
-        print(f"step {done:4d}  reward={r:.3f}  thpt={m['throughput']:.0f}"
-              f"  T_seed={m['t_seed']:.1f}s  inst={m['n_remote']}"
-              f"  preemptions={m['preemptions']} migrations={m['migrations']}",
+        print(f"step {done:4d}  reward={r:.3f}"
+              f"  thpt={m['step.throughput']:.0f}"
+              f"  T_seed={m['seed.t_seed']:.1f}s"
+              f"  inst={m['rollout.n_remote']}"
+              f"  preemptions={m['migration.n_preemptions']}"
+              f" migrations={m['migration.n_migrations']}",
               flush=True)
     print("reward curve:", [round(r, 3) for r in h.step_rewards])
 

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
 from repro.core.perfmodel import model_perf_from_cfg
 from repro.data import tokenizer as tok
@@ -65,6 +65,7 @@ runner = HybridRunner(RunnerConfig(mode="rlboost", n_prompts=32,
 runner.load_trace(tr.step_trace([(0.0, 6), (120.0, -1), (150.0, +1)]))
 m = runner.run(n_steps=2)
 for x in m:
-    print(f"hybrid step {x['step']}: {x['throughput']:.0f} tok/s, "
-          f"T_seed={x['t_seed']:.1f}s, instances={x['n_remote']}, "
-          f"migrations={x['migrations']}")
+    print(f"hybrid step {x['step.idx']}: {x['step.throughput']:.0f} tok/s, "
+          f"T_seed={x['seed.t_seed']:.1f}s, "
+          f"instances={x['rollout.n_remote']}, "
+          f"migrations={x['migration.n_migrations']}")

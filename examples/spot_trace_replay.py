@@ -6,7 +6,7 @@ through all four systems and print the Fig 8/10 comparison.
 
 import argparse
 
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from benchmarks.common import run_system
 
 

@@ -47,32 +47,65 @@ seed, workload seed) pair replays the identical adversity schedule.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, fields
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
 
-@dataclass
+# the degradation ladder's counters, in ladder order — each lives in the
+# metrics registry under ``faults.<name>``
+FAULT_COUNTERS = (
+    "n_chunk_retries",        # fetches re-enqueued (any cause)
+    "n_corrupt_chunks",       # digest mismatch caught at fetch time
+    "n_pruned_chunks",        # fetch returned no payload
+    "n_deadline_timeouts",    # fetches abandoned past their deadline
+    "n_chunk_failures",       # chunks that exhausted every retry
+    "n_blacklisted_agents",   # probation events (re-entries count)
+    "n_hard_preemptions",     # grace_s = 0 kills (no KV export)
+    "n_export_truncated",     # groups whose export missed the window
+    "n_kv_fallbacks",         # requests re-routed to re-prefill
+    "n_pull_replans",         # weight pulls restarted after failure
+)
+
+
 class FaultStats:
     """Counters the degradation ladder increments as it absorbs faults.
 
     One instance per :class:`RolloutManager`; every ``ChunkPull`` the
     manager (or its instances) creates shares it, so a single object
-    surfaces the whole run's fault-handling behavior."""
-    n_chunk_retries: int = 0        # fetches re-enqueued (any cause)
-    n_corrupt_chunks: int = 0       # digest mismatch caught at fetch time
-    n_pruned_chunks: int = 0        # fetch returned no payload
-    n_deadline_timeouts: int = 0    # fetches abandoned past their deadline
-    n_chunk_failures: int = 0       # chunks that exhausted every retry
-    n_blacklisted_agents: int = 0   # probation events (re-entries count)
-    n_hard_preemptions: int = 0     # grace_s = 0 kills (no KV export)
-    n_export_truncated: int = 0     # groups whose export missed the window
-    n_kv_fallbacks: int = 0         # requests re-routed to re-prefill
-    n_pull_replans: int = 0         # weight pulls restarted after failure
+    surfaces the whole run's fault-handling behavior.
+
+    The values live in a :class:`~repro.obs.metrics.MetricsRegistry`
+    under ``faults.*`` dotted names (the flight recorder's one table);
+    the attribute accessors here are thin views, so every existing
+    ``stats.n_corrupt_chunks += 1`` call site works unchanged and a
+    registry snapshot sees the same numbers.  A standalone
+    ``FaultStats()`` owns a private registry."""
+
+    __slots__ = ("registry",)
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        object.__setattr__(self, "registry",
+                           registry if registry is not None
+                           else MetricsRegistry())
+        for name in FAULT_COUNTERS:
+            self.registry.counters.setdefault(f"faults.{name}", 0)
+
+    def __getattr__(self, name: str):
+        if name in FAULT_COUNTERS:
+            return self.registry.counters.get(f"faults.{name}", 0)
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value):
+        if name in FAULT_COUNTERS:
+            self.registry.counters[f"faults.{name}"] = value
+        else:
+            object.__setattr__(self, name, value)
 
     def as_dict(self) -> Dict[str, int]:
-        return {f.name: getattr(self, f.name) for f in fields(self)}
+        return {name: getattr(self, name) for name in FAULT_COUNTERS}
 
 
 class PeerHealth:

@@ -31,8 +31,11 @@ from repro.core.perfmodel import (RESERVED_NODE, SPOT_INSTANCE, InstanceKind,
 from repro.core.requests import Request
 from repro.core.rollout_manager import RolloutManager
 from repro.core.seeding import SeedingScheduler, StepStats
-from repro.core.trace import TraceEvent
+from repro.core.spot_trace import TraceEvent
 from repro.core.weight_transfer import TransferAgent, WeightStore
+from repro.obs.accounting import aggregate as aggregate_accounts
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.transfer.chunkstore import ChunkStore
 
 
@@ -70,6 +73,11 @@ class RunnerConfig:
     # The plan's flap schedule installs on the event loop at construction;
     # the manager samples preemption grace / fetch outcomes from it.
     fault_plan: Optional[object] = None
+    # flight recorder: record spans on the event clock into a bounded
+    # ring (off by default — the null tracer keeps hot paths at ~0 cost).
+    # Metrics are ALWAYS on: run() returns registry snapshots either way.
+    trace: bool = False
+    trace_capacity: int = 65536
 
 
 class HybridRunner:
@@ -85,6 +93,19 @@ class HybridRunner:
         self.publish_fn = publish_fn
         self.request_factory = request_factory
         self.loop = EventLoop()
+        # flight recorder: one registry for the whole run; the tracer
+        # records on the event clock when cfg.trace is set (NULL_TRACER
+        # otherwise — instrumented paths cost one no-op call)
+        self.registry = MetricsRegistry()
+        self.tracer = (Tracer(lambda: self.loop.now,
+                              capacity=cfg.trace_capacity)
+                       if cfg.trace else NULL_TRACER)
+        if engine_factory is not None:
+            # real backend: surface the engine's JIT-cache stats under
+            # the registry's dotted names (lazy view — values always
+            # match the legacy accessor because they ARE the accessor)
+            from repro.serving.engine import jit_cache_stats
+            self.registry.register_view("engine.jit", jit_cache_stats)
         agents = [TransferAgent(i, RESERVED_NODE.dcn_gbps
                                 * cfg.transfer_gbps_scale)
                   for i in range(cfg.n_reserved_nodes)]
@@ -105,7 +126,8 @@ class HybridRunner:
             decode_horizon=cfg.decode_horizon,
             migration=cfg.migration, kv_codec=cfg.kv_codec,
             kv_sim_chunks=max(cfg.transfer_chunks // 4, 1),
-            faults=cfg.fault_plan)
+            faults=cfg.fault_plan,
+            registry=self.registry, tracer=self.tracer)
         if cfg.fault_plan is not None:
             cfg.fault_plan.install(self.loop, self.store.agents)
         self.scheduler = SeedingScheduler(
@@ -210,6 +232,9 @@ class HybridRunner:
         self._trained = 0
         self._step_started = self.loop.now
         self._n_series = [(self.loop.now, self.manager.n_remote())]
+        self._step_span = self.tracer.begin("rl.step", "trainer",
+                                            step=self.step_idx)
+        self._seed_span = None
         self.collector.reset()
 
         # 1. publish new weights (all-gather + D2H snapshot)
@@ -248,6 +273,10 @@ class HybridRunner:
                     max_exec=cfg.local_max_exec // max(self.scheduler.n_resv, 1))
                 self._locals.append(inst)
             if cfg.mode == "rlboost":
+                self._seed_span = self.tracer.begin(
+                    "seed.window", "trainer", parent=self._step_span,
+                    t_seed=self.scheduler.t_seed,
+                    n_engines=len(self._locals))
                 self.loop.schedule(max(self.scheduler.t_seed, snap_t),
                                    self._end_seeding)
         self._reconcile()
@@ -273,6 +302,9 @@ class HybridRunner:
         for inst in self._locals:
             self.manager.release(inst)       # partial responses migrate out
         self._locals = []
+        if self._seed_span is not None:
+            self.tracer.end(self._seed_span)
+            self._seed_span = None
         self._trainer_available_at = self.loop.now
         self._idle_since = self.loop.now
         self._try_train()
@@ -311,6 +343,9 @@ class HybridRunner:
                                       1.15 if self.cfg.n_reserved_nodes > 1
                                       else 1.0))
         self._trainer_busy = True
+        mb_span = self.tracer.begin("train.microbatch", "trainer",
+                                    parent=self._step_span,
+                                    n_samples=len(mb), tokens=tokens)
 
         def done(mb=mb, dt=dt):
             self._trainer_busy = False
@@ -319,6 +354,7 @@ class HybridRunner:
             self._idle_since = self.loop.now
             if self.train_fn is not None:
                 self.train_fn(mb)
+            self.tracer.end(mb_span)
             self._try_train()
         self.loop.schedule(dt, done)
 
@@ -343,18 +379,30 @@ class HybridRunner:
         n_avg = area / max(now - self._step_started, 1e-9)
 
         tokens = sum(r.total_len for r in self._step_requests)
-        self.metrics.append(dict(
-            step=self.step_idx, t_start=self._step_started, t_end=now,
-            step_time=step_time, tokens=tokens,
-            throughput=tokens / max(step_time, 1e-9),
-            t_seed=self.scheduler.t_seed, n_prem=self.scheduler.n_prem,
-            n_remote=self.manager.n_remote(), n_avg=n_avg,
-            t_train=self._t_train, t_train_wait=self._t_train_wait,
-            t_remote_wait=t_remote_wait,
-            migrations=self.manager.n_migrations,
-            restarts=self.manager.n_restarts,
-            preemptions=self.manager.n_preemptions,
-            **self.manager.fault_stats.as_dict()))
+        # flight recorder: per-step quantities land as gauges, the stall
+        # accounting as cumulative totals, and the step's metrics row IS
+        # a registry snapshot — one dotted-name table instead of a
+        # hand-assembled dict (migration.*, faults.*, transfer.pull.*
+        # counters are already registry-resident via the manager)
+        reg = self.registry
+        reg.gauge("step.idx", self.step_idx)
+        reg.gauge("step.t_start", self._step_started)
+        reg.gauge("step.t_end", now)
+        reg.gauge("step.time_s", step_time)
+        reg.gauge("step.tokens", tokens)
+        reg.gauge("step.throughput", tokens / max(step_time, 1e-9))
+        reg.gauge("seed.t_seed", self.scheduler.t_seed)
+        reg.gauge("seed.n_prem", self.scheduler.n_prem)
+        reg.gauge("rollout.n_remote", self.manager.n_remote())
+        reg.gauge("rollout.n_avg", n_avg)
+        reg.gauge("rollout.t_remote_wait_s", t_remote_wait)
+        reg.gauge("train.t_train_s", self._t_train)
+        reg.gauge("train.t_wait_s", self._t_train_wait)
+        for k, v in aggregate_accounts(self.manager.accounts(),
+                                       now).items():
+            reg.set_counter(f"obs.{k}", v)
+        self.tracer.end(self._step_span, tokens=tokens)
+        self.metrics.append(reg.snapshot())
         self.scheduler.update(StepStats(
             t_train_wait=self._t_train_wait, t_remote_wait=t_remote_wait,
             t_train=max(self._t_train, 1e-9), t_remote=t_remote,
@@ -367,7 +415,13 @@ class HybridRunner:
             duration: Optional[float] = None) -> List[Dict]:
         """Run steps back-to-back until n_steps or virtual duration.
         A step in flight when the duration elapses is run to completion
-        (throughput is per completed step, as in the paper)."""
+        (throughput is per completed step, as in the paper).
+
+        Returns one metrics-registry snapshot per step: a flat dict of
+        stable dotted names (``step.*`` / ``seed.*`` / ``rollout.*`` /
+        ``train.*`` per-step gauges; ``migration.*`` / ``faults.*`` /
+        ``transfer.pull.*`` / ``obs.*`` cumulative counters).  Use
+        ``repro.obs.summarize(metrics)`` for run-level fractions."""
         assert n_steps or duration
 
         def loop_steps():
@@ -387,4 +441,9 @@ class HybridRunner:
         self.loop.schedule(0.0, loop_steps)
         self.loop.run()
         self.manager.finalize_costs()
+        # close any span still open when the clock stopped (in-flight
+        # pulls/imports at run end) so every recorded span is well-formed
+        for s in self.tracer.spans():
+            if not s.closed:
+                self.tracer.end(s, truncated=True)
         return self.metrics

@@ -22,6 +22,8 @@ from repro.core.kv_migration import KVExport
 from repro.core.perfmodel import InstanceKind, ModelPerf
 from repro.core.requests import Request, Status
 from repro.core.weight_transfer import TransferAgent
+from repro.obs.accounting import LaneAccount
+from repro.obs.tracer import NULL_TRACER
 from repro.transfer.chunkstore import (ChunkIntegrityError,
                                        MissingChunkError, assemble_kv_state,
                                        build_kv_manifest, synthetic_manifest)
@@ -78,6 +80,14 @@ class RolloutInstance:
         # chunks already here instead of re-fetching the whole manifest
         self._kv_caches: Dict[int, Dict] = {}
         self._step_scheduled = False
+        # flight recorder: this instance's span lane + stall-accounting
+        # ledger (busy/pull/migration/grace/idle must sum to lifetime —
+        # obs.check_accounting); (t_decode, t_prefill) of the scheduled
+        # step pro-rates busy intervals into the two busy buckets
+        self.lane = f"inst:{id}"
+        self.account = LaneAccount(loop.now)
+        self._next_split = (0.0, 0.0)
+        self._next_prefill_tokens = 0
         self._pending_prefill_tokens = 0
         # ragged-prefill accounting: prefix positions the paged prefill
         # kernel re-reads when pending contexts chunk (true lengths, not
@@ -88,6 +98,31 @@ class RolloutInstance:
         self.last_active_t = loop.now
         self.created_t = loop.now
         self._gen = np.random.RandomState(rng_seed * 2654435761 % (2**31))
+
+    @property
+    def tracer(self):
+        # harness stubs drive instances without a full manager; the null
+        # tracer keeps every span call site valid for them
+        return getattr(self.manager, "tracer", NULL_TRACER)
+
+    # ---------------- stall accounting ---------------- #
+    def account_sync(self):
+        """Re-classify this lane's state after any scheduling edge.
+        Priority: busy (a fused step is scheduled) > migration_stall (KV
+        pages in flight, nothing decoding) > pull_stall (weight pull in
+        flight, nothing decoding) > idle.  Decoding WHILE pulling counts
+        busy — a stall bucket means the transfer is why no work runs."""
+        if self.account.closed_at is not None:
+            return
+        now = self.loop.now
+        if self._step_scheduled:
+            self.account.transition("busy", now, split=self._next_split)
+        elif self._imports:
+            self.account.transition("migration_stall", now)
+        elif self.pull is not None and self.pull.active:
+            self.account.transition("pull_stall", now)
+        else:
+            self.account.transition("idle", now)
 
     # ---------------- InstanceView protocol ---------------- #
     def n_pending(self) -> int:
@@ -130,12 +165,14 @@ class RolloutInstance:
             for rec in list(self._imports):
                 if not any(x.id in self.importing for x in rec["reqs"]):
                     rec["pull"].cancel()
+                    self.tracer.end(rec["span"], outcome="cancelled")
                     self._imports.remove(rec)
                     # nothing here references the export anymore: release
                     # its chunk cache (real payloads are full page copies)
                     mid = rec["export"].mig_id
                     if not any(x.kv is rec["export"] for x in self.pending):
                         self._kv_caches.pop(mid, None)
+            self.account_sync()
             return r
         r = self.executing.pop(req_id, None)
         if r is not None and self.engine is not None:
@@ -150,6 +187,7 @@ class RolloutInstance:
         self.importing.clear()
         for rec in self._imports:
             rec["pull"].cancel()
+            self.tracer.end(rec["span"], outcome="cancelled")
         self._imports.clear()
         self._kv_caches.clear()
         for r in list(self.executing.values()):
@@ -197,6 +235,10 @@ class RolloutInstance:
             export = self._export_group(grp)
             if export is not None:
                 self.published_exports.append(export)
+                self.tracer.event(
+                    "migrate.export", self.lane, inst=self.id,
+                    mig_id=export.mig_id, group=grp[0].group,
+                    kv_tokens=export.kv_tokens, n_reqs=len(export.req_ids))
                 for r in grp:
                     if r.id in export.req_ids:
                         r.kv = export
@@ -271,6 +313,10 @@ class RolloutInstance:
             del self._kv_caches[k]
         cache = self._kv_caches.setdefault(export.mig_id, {})
         rec: Dict = {"reqs": list(grp), "export": export, "pull": None}
+        rec["span"] = self.tracer.begin(
+            "migrate.import", self.lane, inst=self.id,
+            mig_id=export.mig_id, n_reqs=len(grp),
+            kv_tokens=export.kv_tokens)
         rec["pull"] = ChunkPull(
             self.loop, [export.agent], export.manifest,
             receiver_gbps=self.kind.dcn_gbps, cache=cache,
@@ -280,7 +326,8 @@ class RolloutInstance:
             on_complete=lambda pull, rec=rec: self._kv_arrived(rec, pull),
             on_failure=lambda pull, rec=rec: self._kv_failed(rec, pull),
             faults=self.manager.faults, health=self.manager.peer_health,
-            stats=self.manager.fault_stats).start()
+            stats=self.manager.fault_stats, tracer=self.tracer,
+            parent_span=rec["span"]).start()
         self._imports.append(rec)
 
     def cancel_imports_from(self, nic):
@@ -294,6 +341,7 @@ class RolloutInstance:
             if rec["export"].agent is not nic:
                 continue
             rec["pull"].cancel()
+            self.tracer.end(rec["span"], outcome="source_dead")
             self._imports.remove(rec)
             self._kv_caches.pop(rec["export"].mig_id, None)
             for r in rec["reqs"]:
@@ -301,6 +349,7 @@ class RolloutInstance:
                     r.kv = None
                     self.manager.fault_stats.n_kv_fallbacks += 1
                     fallback.append(r)
+        self.account_sync()
         if fallback:
             self.pending[0:0] = fallback
             self._kick()
@@ -311,6 +360,7 @@ class RolloutInstance:
         requests re-prefill from their token history."""
         if rec in self._imports:
             self._imports.remove(rec)
+        self.tracer.end(rec["span"], outcome="failed")
         self._kv_caches.pop(rec["export"].mig_id, None)
         grp = [r for r in rec["reqs"]
                if self.importing.pop(r.id, None) is not None]
@@ -318,6 +368,7 @@ class RolloutInstance:
             r.kv = None
             self.manager.fault_stats.n_kv_fallbacks += 1
         if not self.alive or not grp:
+            self.account_sync()
             return
         self.pending[0:0] = grp
         self._kick()
@@ -325,10 +376,12 @@ class RolloutInstance:
     def _kv_arrived(self, rec: Dict, pull):
         if rec in self._imports:
             self._imports.remove(rec)
+        self.tracer.end(rec["span"], outcome="ok")
         grp = [r for r in rec["reqs"] if r.id in self.importing]
         for r in grp:
             self.importing.pop(r.id, None)
         if not self.alive or not grp:
+            self.account_sync()
             return
         export: KVExport = rec["export"]
         if self.engine is not None:
@@ -442,20 +495,24 @@ class RolloutInstance:
             self._next_dt = dt
             self._step_scheduled = True
             self.loop.schedule(dt, self._on_step)
+        self.account_sync()
 
     def _step_time(self) -> float:
         n = max(len(self.executing), 1)
         ctx_lens = [r.total_len for r in self.executing.values()] or [0]
-        t = self.perf.decode_horizon_time(self.kind, n, 0.0, self.cfg,
-                                          ctx_lens=ctx_lens,
-                                          horizon=self.horizon)
+        t_decode = self.perf.decode_horizon_time(self.kind, n, 0.0, self.cfg,
+                                                 ctx_lens=ctx_lens,
+                                                 horizon=self.horizon)
+        t_prefill = 0.0
+        self._next_prefill_tokens = self._pending_prefill_tokens
         if self._pending_prefill_tokens:
-            t += self.perf.prefill_time(
+            t_prefill = self.perf.prefill_time(
                 self.kind, self._pending_prefill_tokens, cfg=self.cfg,
                 prefix_tokens=self._pending_prefill_prefix_tokens)
             self._pending_prefill_tokens = 0
             self._pending_prefill_prefix_tokens = 0.0
-        return t
+        self._next_split = (t_decode, t_prefill)
+        return t_decode + t_prefill
 
     def _emit(self, r: Request, ev):
         """Real-backend event: record token + notify manager."""
@@ -473,12 +530,27 @@ class RolloutInstance:
         self._step_scheduled = False
         if not self.alive:
             return
+        self.account_sync()                # close the busy interval
         n_exec = len(self.executing)
         if n_exec == 0:
             return
         dt = getattr(self, "_next_dt", 1e-3)
         self.busy_time += dt
         self.last_active_t = self.loop.now
+        # retroactive spans for the fused step that just elapsed: a
+        # prefill chunk (when admission charged one) then the decode
+        # horizon — one picture-block per modeled dispatch
+        tracer = self.tracer
+        if tracer.enabled:
+            now = self.loop.now
+            td, tp = self._next_split
+            if tp > 0.0:
+                tracer.end(tracer.begin(
+                    "prefill.chunk", self.lane, t0=now - dt, inst=self.id,
+                    tokens=self._next_prefill_tokens), t1=now - dt + tp)
+            tracer.end(tracer.begin(
+                "decode.horizon", self.lane, t0=now - dt + tp, inst=self.id,
+                n_exec=n_exec, horizon=self.horizon), t1=now)
 
         if self.engine is not None:
             # events carry decode tokens for active slots plus first tokens

@@ -25,11 +25,30 @@ from repro.core.load_balancer import LoadBalancer
 from repro.core.perfmodel import InstanceKind, ModelPerf, SPOT_INSTANCE
 from repro.core.requests import Request, Status
 from repro.core.weight_transfer import WeightStore
+from repro.obs.accounting import LaneAccount
+from repro.obs.metrics import MetricsRegistry, RegistryCounter
+from repro.obs.tracer import NULL_TRACER
 from repro.transfer.chunkstore import MissingChunkError
 from repro.transfer.puller import ChunkPull
 
 
 class RolloutManager:
+    # run-level counters live in the metrics registry under stable dotted
+    # names (the flight recorder's one table); these descriptors keep the
+    # legacy ``self.n_x += 1`` call sites and accessors working as thin
+    # views over the registry
+    n_preemptions = RegistryCounter("migration.n_preemptions")
+    n_migrations = RegistryCounter("migration.n_migrations")
+    n_restarts = RegistryCounter("migration.n_restarts")
+    n_kv_migrations = RegistryCounter("migration.n_kv_migrations")
+    n_prefill_migrations = RegistryCounter("migration.n_prefill_migrations")
+    kv_bytes_pulled = RegistryCounter("migration.kv_bytes_pulled")
+    kv_stall_s = RegistryCounter("migration.kv_stall_s")
+    n_duplicate_completions = RegistryCounter(
+        "rollout.n_duplicate_completions")
+    n_chunk_fetches = RegistryCounter("transfer.pull.n_chunk_fetches")
+    n_chunk_cache_hits = RegistryCounter("transfer.pull.n_cache_hits")
+
     def __init__(self, loop: EventLoop, perf: ModelPerf, store: WeightStore,
                  *, lb: Optional[LoadBalancer] = None,
                  spot_kind: InstanceKind = SPOT_INSTANCE,
@@ -46,7 +65,14 @@ class RolloutManager:
                  migration: str = "auto",             # | "kv" | "recompute"
                  kv_codec: str = "none",              # | "int8"
                  kv_sim_chunks: int = 8,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None):
+        # flight recorder: the registry backs every counter below (and the
+        # FaultStats); the tracer records spans on the event clock.  Both
+        # must exist before the first counter assignment.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.loop = loop
         self.perf = perf
         self.store = store
@@ -79,13 +105,16 @@ class RolloutManager:
         # failures accumulate across pulls and the whole run's ladder
         # behavior surfaces in one counter set
         self.faults = faults
-        self.fault_stats = FaultStats()
+        self.fault_stats = FaultStats(self.registry)
         self.peer_health = PeerHealth(
             threshold=(faults.blacklist_threshold if faults else 3),
             probation_s=(faults.probation_s if faults else 30.0),
             stats=self.fault_stats)
 
         self.instances: Dict[int, RolloutInstance] = {}
+        # stall accounting: ledgers of dead instances stay here so the
+        # whole run's time decomposition survives instance churn
+        self._retired_accounts: List[tuple] = []
         # chunk caches of preempted instances: a restarted instance adopts
         # one (local disk survives the VM reclaim), resuming its pull from
         # the chunks already present
@@ -116,6 +145,12 @@ class RolloutManager:
     def next_mig_id(self) -> int:
         self._next_mig_id += 1
         return self._next_mig_id
+
+    def accounts(self) -> List[tuple]:
+        """Every instance lifetime's stall-accounting ledger, retired
+        first — the input to ``obs.check_accounting``."""
+        return self._retired_accounts + [
+            (i.id, i.account) for i in self.instances.values()]
 
     def note_kv_migration(self, reqs: List[Request], export, pull):
         self.n_kv_migrations += len(reqs)
@@ -210,12 +245,21 @@ class RolloutManager:
         if inst.pull is not None and inst.pull.active:
             inst.pull.retarget(manifest, fetch_fn=self.store.fetch_fn(),
                                wire_scale=scale)
+            self.tracer.event("pull.retarget", f"inst:{inst.id}",
+                              inst=inst.id, version=manifest.version)
             return
+
+        span = self.tracer.begin("pull.weights", f"inst:{inst.id}",
+                                 inst=inst.id, version=manifest.version,
+                                 n_chunks=len(manifest.chunks))
 
         def done(pull: ChunkPull):
             inst.pull = None
             self.n_chunk_fetches += pull.n_fetched
             self.n_chunk_cache_hits += pull.n_cache_hits
+            self.tracer.end(span, n_fetched=pull.n_fetched,
+                            n_cache_hits=pull.n_cache_hits, outcome="ok")
+            inst.account_sync()
             if not inst.alive:
                 return
             version = pull.manifest.version
@@ -236,6 +280,8 @@ class RolloutManager:
                     return
                 inst.engine.swap_weights(params, version)
             inst.weight_version = version
+            self.tracer.event("swap.weights", f"inst:{inst.id}",
+                              inst=inst.id, version=version)
             # keep only the installed version's chunks: a restarted
             # instance resumes same-version none/int8 pulls for free
             # (delta chunks can't help it — its base weights died with
@@ -256,6 +302,8 @@ class RolloutManager:
             inst.pull = None
             self.n_chunk_fetches += pull.n_fetched
             self.fault_stats.n_pull_replans += 1
+            self.tracer.end(span, outcome="failed")
+            inst.account_sync()
             if inst.alive:
                 self.loop.schedule(5.0, lambda: self._retry_pull(inst))
 
@@ -265,7 +313,9 @@ class RolloutManager:
             fetch_fn=self.store.fetch_fn(), fanout=self.transfer_fanout,
             wire_scale=scale, on_complete=done, on_failure=failed,
             faults=self.faults, health=self.peer_health,
-            stats=self.fault_stats).start()
+            stats=self.fault_stats, tracer=self.tracer,
+            parent_span=span).start()
+        inst.account_sync()
 
     def _retry_pull(self, inst: RolloutInstance):
         if inst.alive and inst.pull is None:
@@ -293,9 +343,17 @@ class RolloutManager:
             grace_s = (self.faults.preemption_grace()
                        if self.faults is not None else math.inf)
         hard = grace_s <= 0.0
+        # the grace notice is an instant on today's clock (export time is
+        # budgeted from the window, the kill lands at one event time), so
+        # the account's grace bucket stays 0 and the lane shows the
+        # notice as an instant span — ROADMAP "Telemetry plane" notes
+        self.tracer.event("preempt.grace", f"inst:{inst.id}", inst=inst.id,
+                          grace_s=(None if math.isinf(grace_s) else grace_s),
+                          hard=hard)
         inst.preempt()
         if inst.pull is not None:
             inst.pull.cancel()
+            self.tracer.end(inst.pull.parent_span, outcome="cancelled")
             inst.pull = None
         if inst.chunk_cache and len(self._orphan_caches) < 16:
             self._orphan_caches.append(inst.chunk_cache)
@@ -334,6 +392,9 @@ class RolloutManager:
             r.status = Status.QUEUED
             r.instance_id = None
             self.queued.append(r)
+        self.tracer.event("instance.dead", f"inst:{inst.id}", inst=inst.id,
+                          cause=("hard_kill" if hard else "preempt"))
+        self._retire_account(inst)
         del self.instances[inst.id]
         self._dispatch()
 
@@ -349,11 +410,16 @@ class RolloutManager:
             if inst is not src and inst.alive:
                 inst.cancel_imports_from(src.nic)
 
+    def _retire_account(self, inst: RolloutInstance):
+        inst.account.close(self.loop.now)
+        self._retired_accounts.append((inst.id, inst.account))
+
     def release(self, inst: RolloutInstance):
         """Voluntary shutdown (seeding end / over-provisioning)."""
         inst.alive = False
         if inst.pull is not None:
             inst.pull.cancel()
+            self.tracer.end(inst.pull.parent_span, outcome="cancelled")
             inst.pull = None
         if not inst.local:
             self.spot_seconds += self.loop.now - inst.created_t
@@ -365,6 +431,9 @@ class RolloutManager:
             r.status = Status.QUEUED
             r.instance_id = None
             self.queued.append(r)
+        self.tracer.event("instance.dead", f"inst:{inst.id}", inst=inst.id,
+                          cause="release")
+        self._retire_account(inst)
         self.instances.pop(inst.id, None)
         self._dispatch()
 

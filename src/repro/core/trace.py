@@ -1,94 +1,23 @@
-"""Preemptible-instance availability traces.
+"""Deprecated alias for :mod:`repro.core.spot_trace`.
 
-The paper replays real spot traces from Bamboo [NSDI'23] (segments A/B/C,
-Table 5).  Offline, we synthesize traces with the same published segment
-statistics — average #instances, #allocations, #preemptions over 2 hours —
-including the characteristic "spike" pattern (a preemption followed by an
-immediate re-allocation, Fig 7).  Traces are seeded and deterministic.
-
-A trace is a sorted list of (time_s, delta) events on *available capacity*;
-the replayer in hybrid_runtime turns capacity changes into instance
-allocations/preemptions (respecting N_prem).
+This module held the Bamboo spot-capacity availability traces and was
+named ``trace`` long before the repo grew an execution tracer
+(:mod:`repro.obs.tracer`).  The two are unrelated — availability traces
+are an *input* (when capacity appears/vanishes), execution spans are an
+*output* — so the capacity traces now live under the unambiguous name
+``spot_trace``.  Import from there; this shim re-exports everything and
+warns once.
 """
 
-from __future__ import annotations
+import warnings
 
-from dataclasses import dataclass
-from typing import List, Tuple
+from repro.core.spot_trace import *  # noqa: F401,F403
+from repro.core.spot_trace import (DURATION_S, SEGMENT_STATS,  # noqa: F401
+                                   TraceEvent, average_capacity,
+                                   capacity_at, constant_trace,
+                                   step_trace, synthesize_segment)
 
-import numpy as np
-
-SEGMENT_STATS = {
-    # availability, preemption intensity, avg instances, allocs, preemptions
-    "A": dict(avg=6.53, allocs=13, preempts=8, spikes=4),
-    "B": dict(avg=4.58, allocs=8, preempts=9, spikes=1),
-    "C": dict(avg=6.06, allocs=6, preempts=2, spikes=1),
-}
-
-DURATION_S = 2 * 3600.0
-
-
-@dataclass(frozen=True)
-class TraceEvent:
-    t: float
-    delta: int      # +1 allocation capacity, -1 preemption
-
-
-def synthesize_segment(name: str, seed: int = 0,
-                       duration: float = DURATION_S) -> List[TraceEvent]:
-    st = SEGMENT_STATS[name]
-    rng = np.random.RandomState(seed * 7919 + ord(name))
-    events: List[TraceEvent] = []
-    # start near the segment average
-    start = int(round(st["avg"]))
-    events.append(TraceEvent(0.0, start))
-
-    # paired spikes: preempt + immediate realloc (within ~20s)
-    n_spikes = st["spikes"]
-    spike_times = np.sort(rng.uniform(0.1, 0.9, n_spikes)) * duration
-    for t in spike_times:
-        events.append(TraceEvent(float(t), -1))
-        events.append(TraceEvent(float(t) + rng.uniform(5, 20), +1))
-
-    # remaining (unpaired) allocations / preemptions
-    extra_a = max(st["allocs"] - start - n_spikes, 0)
-    extra_p = max(st["preempts"] - n_spikes, 0)
-    for t in rng.uniform(0.05, 0.95, extra_p) * duration:
-        events.append(TraceEvent(float(t), -1))
-    for t in rng.uniform(0.1, 1.0, extra_a) * duration:
-        events.append(TraceEvent(float(t), +1))
-
-    events.sort(key=lambda e: e.t)
-    # keep capacity non-negative
-    cap, fixed = 0, []
-    for e in events:
-        if cap + e.delta < 0:
-            continue
-        cap += e.delta
-        fixed.append(e)
-    return fixed
-
-
-def capacity_at(events: List[TraceEvent], t: float) -> int:
-    return sum(e.delta for e in events if e.t <= t)
-
-
-def average_capacity(events: List[TraceEvent],
-                     duration: float = DURATION_S) -> float:
-    ts = [e.t for e in events] + [duration]
-    cap, area, last = 0, 0.0, 0.0
-    for e in events:
-        area += cap * (e.t - last)
-        cap += e.delta
-        last = e.t
-    area += cap * (duration - last)
-    return area / duration
-
-
-def constant_trace(n: int) -> List[TraceEvent]:
-    return [TraceEvent(0.0, n)]
-
-
-def step_trace(schedule: List[Tuple[float, int]]) -> List[TraceEvent]:
-    """schedule: [(time, capacity_delta)] — for ablation scenarios."""
-    return [TraceEvent(t, d) for t, d in schedule]
+warnings.warn(
+    "repro.core.trace is deprecated; the spot-capacity traces moved to "
+    "repro.core.spot_trace (repro.obs.tracer is the execution tracer)",
+    DeprecationWarning, stacklevel=2)

@@ -1,0 +1,18 @@
+"""Flight recorder: one telemetry plane for every subsystem.
+
+  * :mod:`repro.obs.tracer` — structured spans on the clock each plane
+    already runs on (event clock in sim, wall clock in the real engine);
+  * :mod:`repro.obs.metrics` — the one registry of dotted-name
+    counters/gauges/histograms every ad-hoc counter now lives under;
+  * :mod:`repro.obs.perfetto` — Chrome-trace-event export (open a run
+    at https://ui.perfetto.dev);
+  * :mod:`repro.obs.accounting` — the per-instance stall-accounting
+    identity that proves the telemetry complete.
+"""
+
+from repro.obs.accounting import (AccountingError, BUCKETS,  # noqa: F401
+                                  LaneAccount, aggregate, check_accounting)
+from repro.obs.metrics import (Histogram, MetricsRegistry,  # noqa: F401
+                               RegistryCounter, summarize)
+from repro.obs.perfetto import export_chrome_trace  # noqa: F401
+from repro.obs.tracer import NULL_TRACER, Span, Tracer  # noqa: F401

@@ -37,7 +37,12 @@ class RealRLHarness:
                  max_new: int = 12, clip_eps: float = 0.2,
                  dataset: Optional[MathTaskDataset] = None,
                  page_size: int = 16, prefill_chunk: int = 256,
-                 staleness_limit: Optional[int] = None):
+                 staleness_limit: Optional[int] = None,
+                 engine_tracer=None):
+        # flight recorder, real backend: the engines' work is WALL time,
+        # so they record into their own wall-clock Tracer (pass one in to
+        # enable; the sim-side event-clock tracer is runner_cfg.trace)
+        self.engine_tracer = engine_tracer
         self.cfg = model_cfg
         self.rc = runner_cfg
         self.max_new = max_new
@@ -84,6 +89,19 @@ class RealRLHarness:
             train_fn=self._train_fn,
             publish_fn=self._publish_fn,
             request_factory=self._request_factory)
+        # staleness spans surface under the registry's dotted names as a
+        # lazy view — snapshot values ARE the legacy self.staleness list
+        self.runner.registry.register_view("rl.staleness",
+                                           self._staleness_view)
+
+    def _staleness_view(self) -> Dict:
+        if not self.staleness:
+            return dict(n_microbatches=0, n_stale_filtered=0)
+        return dict(
+            n_microbatches=len(self.staleness),
+            mean=float(np.mean([s["mean"] for s in self.staleness])),
+            max=int(max(s["max"] for s in self.staleness)),
+            n_stale_filtered=self.n_stale_filtered)
 
     # ------------------------------------------------------------------ #
     def _engine_factory(self):
@@ -94,7 +112,8 @@ class RealRLHarness:
                                slab_len=128, temperature=self.temperature,
                                page_size=self.page_size,
                                prefill_chunk=self.prefill_chunk,
-                               horizon=self.rc.decode_horizon)
+                               horizon=self.rc.decode_horizon,
+                               tracer=self.engine_tracer)
 
     def _request_factory(self, rid: int, group: int) -> Request:
         sample = self.dataset.sample(group)

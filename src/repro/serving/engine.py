@@ -68,6 +68,7 @@ from repro.data.tokenizer import EOS, PAD
 from repro.models import kv_cache as kvc
 from repro.models.kv_cache import GARBAGE_PAGE, OutOfPages, PagedKVAllocator
 from repro.models.transformer import (CPU_RT, forward, logits_from_hidden)
+from repro.obs.tracer import NULL_TRACER
 from repro.rl.sampler import sample_token
 
 _JIT_CACHE: Dict = {}
@@ -279,7 +280,8 @@ class InferenceEngine:
                  slab_len: int = 256, temperature: float = 1.0,
                  weight_version: int = 0, page_size: int = 16,
                  prefill_chunk: int = 256, max_context: Optional[int] = None,
-                 horizon: int = 1, use_pallas: Optional[bool] = None):
+                 horizon: int = 1, use_pallas: Optional[bool] = None,
+                 tracer=None):
         """``slab_len`` sizes the initial pool (max_batch * slab_len tokens)
         and the local-attention ring width; unlike the old dense slab it is
         NOT a hard length cap — pages are allocated (and the pool grown) on
@@ -297,6 +299,11 @@ class InferenceEngine:
         gather_pages oracle path (bit-parity testing)."""
         self.cfg = cfg
         self.params = params
+        # flight recorder: engines run REAL compute, so their tracer (if
+        # any) must be on a wall clock — the sim's event-clock tracer paces
+        # the modeled time, not this work
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_lane = "engine"
         if use_pallas is None:
             use_pallas = _serve_pallas_default()
         self.use_pallas = bool(use_pallas)
@@ -360,6 +367,8 @@ class InferenceEngine:
         """
         self.params = params
         self.weight_version = version
+        self.tracer.event("engine.swap_weights", self.trace_lane,
+                          version=version)
 
     def load_weights(self, params, version: int):
         self.swap_weights(params, version)
@@ -482,8 +491,17 @@ class InferenceEngine:
     # scheduler step: decode phase, then prefill phase (token budget)
     # ------------------------------------------------------------------ #
     def step(self) -> List[StepEvent]:
-        events = self._decode_phase()
-        events.extend(self._prefill_phase())
+        tr = self.tracer
+        if not tr.enabled:                      # zero-overhead when off
+            events = self._decode_phase()
+            events.extend(self._prefill_phase())
+            return events
+        with tr.span("engine.decode", self.trace_lane,
+                     n_active=self.n_active, horizon=self.horizon):
+            events = self._decode_phase()
+        with tr.span("engine.prefill", self.trace_lane,
+                     n_waiting=len(self.waiting)):
+            events.extend(self._prefill_phase())
         return events
 
     # ---------------- device-resident state ---------------- #
@@ -752,7 +770,10 @@ class InferenceEngine:
                 page_idx=idxs))
             if not self._chunkable:         # ring / SSM state exists
                 slot_state[rid] = kvc.gather_slot_rows(self.cache, slot)
+        span = self.tracer.begin("engine.kv_export", self.trace_lane,
+                                 n_reqs=len(req_ids), n_pages=len(unique))
         pages = (kvc.gather_pages(self.cache, unique) if unique else {})
+        self.tracer.end(span)
         self.n_kv_export_pages += len(unique)
         return dict(page_size=self.page_size, n_pages=len(unique),
                     pages=pages, requests=requests, slot_state=slot_state)
@@ -781,6 +802,8 @@ class InferenceEngine:
         self._check_admission(
             max(r["ctx_len"] for r in reqs),
             max(r["max_total"] for r in reqs), need_slots=len(reqs))
+        span = self.tracer.begin("engine.kv_import", self.trace_lane,
+                                 n_reqs=len(reqs))
         # allocate each referenced unique page once
         used = sorted({i for r in reqs for i in r["page_idx"]})
         while True:
@@ -831,6 +854,7 @@ class InferenceEngine:
         self.cache["pos"] = self.cache["pos"].at[idx].set(val)
         self._state_dirty = True
         self._bt_dirty = True
+        self.tracer.end(span, n_pages=len(used))
         return slots
 
     # ------------------------------------------------------------------ #

@@ -55,6 +55,7 @@ from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.events import EventLoop
 from repro.core.faults import FaultPlan, FaultStats, PeerHealth
+from repro.obs.tracer import NULL_TRACER
 from repro.transfer.chunkstore import ChunkMeta, Manifest
 
 
@@ -73,7 +74,15 @@ class ChunkPull:
                  health: Optional[PeerHealth] = None,
                  stats: Optional[FaultStats] = None,
                  max_retries: int = 4, backoff_s: float = 0.05,
-                 backoff_cap_s: float = 2.0):
+                 backoff_cap_s: float = 2.0,
+                 tracer=None, parent_span=None):
+        # flight recorder: each chunk fetch is a ``transfer.chunk`` span
+        # on its serving agent's NIC lane, parented to the owner's pull /
+        # import span so a Perfetto lane shows which transfer a chunk
+        # belonged to
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.parent_span = parent_span
+        self._chunk_spans: Dict[str, object] = {}   # digest -> open span
         self.loop = loop
         self.agents = agents
         self.manifest = manifest
@@ -187,6 +196,11 @@ class ChunkPull:
             self._inflight[chunk.digest] = agent
             seq = next(self._seq)
             self._fetch_seq[chunk.digest] = seq
+            if self.tracer.enabled:
+                self._chunk_spans[chunk.digest] = self.tracer.begin(
+                    "transfer.chunk", f"nic:{agent.id}",
+                    parent=self.parent_span, digest=chunk.digest[:12],
+                    nbytes=chunk.nbytes)
             # bandwidth sampled NOW: sender share over its active fetches,
             # receiver NIC split across this pull's in-flight fetches
             bw = min(agent.share_gbps(),
@@ -212,6 +226,11 @@ class ChunkPull:
                                s=seq, o=outcome: self._done(c, a, f, s, o))
 
     # ------------------------------------------------------------------ #
+    def _close_chunk_span(self, digest: str, outcome: str):
+        sp = self._chunk_spans.pop(digest, None)
+        if sp is not None:
+            self.tracer.end(sp, outcome=outcome)
+
     def _deadline(self, chunk: ChunkMeta, agent, seq: int):
         if not self.active or self._fetch_seq.get(chunk.digest) != seq:
             return          # fetch already settled (or pull cancelled —
@@ -219,6 +238,7 @@ class ChunkPull:
         del self._fetch_seq[chunk.digest]
         agent.active_pulls -= 1
         self._inflight.pop(chunk.digest, None)
+        self._close_chunk_span(chunk.digest, "timeout")
         self.n_timeouts += 1
         self.stats.n_deadline_timeouts += 1
         self.health.record_failure(agent.id, self.loop.now)
@@ -232,6 +252,7 @@ class ChunkPull:
         del self._fetch_seq[chunk.digest]
         agent.active_pulls -= 1
         if not self.active:
+            self._close_chunk_span(chunk.digest, "cancelled")
             return
         self._inflight.pop(chunk.digest, None)
         ok, kind, payload = True, "", True
@@ -251,6 +272,7 @@ class ChunkPull:
             ok, kind = False, "corrupt"
         elif outcome == "pruned":
             ok, kind = False, "pruned"
+        self._close_chunk_span(chunk.digest, "ok" if ok else kind)
         if ok:
             self.cache[chunk.digest] = payload
             self.n_fetched += 1

@@ -21,7 +21,7 @@ from repro.core.perfmodel import (ModelPerf, SPOT_INSTANCE, InstanceKind,
                                   model_perf_from_cfg)
 from repro.core.requests import Request
 from repro.core.rollout_manager import RolloutManager
-from repro.core.trace import TraceEvent
+from repro.core.spot_trace import TraceEvent
 from repro.core.weight_transfer import TransferAgent, WeightStore
 from repro.data import tokenizer as tok
 from repro.models import init_params
@@ -421,9 +421,9 @@ def test_chaos_sweep_invariants_hold(seed):
     summary = check_invariants(r.manager, r._step_requests)
     assert summary["n_requests"] == rc.n_prompts * rc.group_size
     assert r.manager.n_preemptions > 0
-    # fault counters surface in the step metrics
-    assert "n_hard_preemptions" in metrics[-1]
-    assert metrics[-1]["restarts"] == r.manager.n_restarts
+    # fault counters surface in the step metrics under dotted names
+    assert "faults.n_hard_preemptions" in metrics[-1]
+    assert metrics[-1]["migration.n_restarts"] == r.manager.n_restarts
 
 
 def test_invariant_checker_catches_a_lost_request():

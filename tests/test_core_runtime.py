@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import trace as tr
+from repro.core import spot_trace as tr
 from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
 from repro.core.perfmodel import model_perf_from_cfg
 
@@ -26,15 +26,15 @@ def test_rlboost_beats_colocated():
     # benchmarks/bench_trace_throughput.py
     _, colo = _run("colocated", 0)
     _, boost = _run("rlboost", 6)
-    t_c = np.mean([m["throughput"] for m in colo[1:]])
-    t_b = np.mean([m["throughput"] for m in boost[1:]])
+    t_c = np.mean([m["step.throughput"] for m in colo[1:]])
+    t_b = np.mean([m["step.throughput"] for m in boost[1:]])
     assert t_b > 1.15 * t_c, (t_b, t_c)
 
 
 def test_all_requests_complete_and_trained():
     r, metrics = _run("rlboost", 4)
     for m in metrics:
-        assert m["tokens"] > 0
+        assert m["step.tokens"] > 0
     assert all(x.done for x in r._step_requests)
     assert r._trained == r._total
 
@@ -63,7 +63,7 @@ def test_migrate_faster_than_recompute_under_preemption():
         r.load_trace(tr.step_trace([(0.0, 6), (25.0, -1), (26.0, -1),
                                     (27.0, -1)]))
         m = r.run(n_steps=1)
-        return m[0]["step_time"]
+        return m[0]["step.time_s"]
 
     t_mig = run("migrate")
     t_rec = run("recompute")
@@ -80,7 +80,7 @@ def test_pull_uses_midstep_instances_sync_does_not():
         # 2 instances at t=0; 6 more appear shortly after the step starts
         r.load_trace(tr.step_trace([(0.0, 2), (30.0, 6)]))
         m = r.run(n_steps=1)
-        return m[0]["step_time"]
+        return m[0]["step.time_s"]
 
     t_pull = run("pull")
     t_sync = run("sync")
@@ -95,7 +95,7 @@ def test_nprem_bounds_allocation():
     r.load_trace(tr.constant_trace(64))
     metrics = r.run(n_steps=3)
     for m in metrics:
-        assert m["n_remote"] <= max(r.scheduler.max_instances(), 1) + 1
+        assert m["rollout.n_remote"] <= max(r.scheduler.max_instances(), 1) + 1
 
 
 def test_trace_synthesis_matches_stats():

@@ -217,7 +217,7 @@ def test_upgrade_in_flight_refetches_only_invalidated_chunks():
 # --------------------------------------------------------------------------- #
 def test_sim_runtime_pulls_chunks_and_stamps_versions():
     from repro.configs import get_config
-    from repro.core import trace as tr
+    from repro.core import spot_trace as tr
     from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
     from repro.core.perfmodel import model_perf_from_cfg
     cfg_m = get_config("qwen3-8b")
