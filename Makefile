@@ -8,7 +8,7 @@
 PY := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
 .PHONY: test lint bench-smoke bench-kernels bench-migration \
-        check-regression refresh-baselines ci
+        check-regression refresh-baselines recovery-smoke ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,6 +24,7 @@ bench-smoke:
 	$(PY) -m benchmarks.run --quick --only migration
 	$(PY) -m benchmarks.run --quick --only integrity
 	$(PY) -m benchmarks.run --quick --only fault
+	$(PY) -m benchmarks.run --quick --only recovery
 	$(PY) -m benchmarks.run --quick --only obs
 
 bench-migration:
@@ -35,10 +36,17 @@ bench-migration:
 bench-kernels:
 	$(PY) -m benchmarks.run --quick --only kernels
 
+# kill-and-resume smoke: the 5-seed chaos sweep must reproduce the
+# uninterrupted run's completed-response set bit-identically after a
+# trainer crash + resume, gated by the extended invariant checker
+recovery-smoke:
+	$(PY) -m pytest -x -q tests/test_recovery.py \
+	    -k "crash_resume or double_crash or torn_newest"
+
 check-regression:
 	$(PY) -m benchmarks.check_regression
 
 refresh-baselines:
 	$(PY) -m benchmarks.check_regression --update
 
-ci: test bench-smoke check-regression
+ci: test recovery-smoke bench-smoke check-regression

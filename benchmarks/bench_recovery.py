@@ -1,0 +1,133 @@
+"""Recovery plane (PR 8): what crash-consistent checkpointing costs, and
+what a trainer-node crash costs once it is survivable.
+
+Three runs of the same seeded hybrid workload on the modeled event clock:
+
+  plain     — no checkpointing (the pre-recovery-plane runner)
+  ckpt      — RunCheckpoint at every step boundary (chunk-plane payload,
+              blocking D2H overhead charged to the clock)
+  resume    — the ckpt run killed by a trainer crash mid-run, then
+              resumed from the last boundary and driven to completion
+
+Headline metrics (CI-gated via check_regression):
+
+  ckpt_overhead_fraction   sum of modeled blocking checkpoint overhead
+                           over the ckpt run's duration (worse above)
+  resume_throughput_ratio  plain duration / (crash + resume) total
+                           duration — the price of re-executing the
+                           partial step the crash destroyed (worse below)
+
+Integrity is asserted, not just measured: the resumed run's completed-
+response set must be bit-identical to the plain run's (the fig16-style
+gap is exactly zero by construction), and exactly-once training
+consumption must hold across the crash — a recovery plane that loses or
+duplicates work fails the BENCH, not just a test.
+"""
+
+import json
+import shutil
+import tempfile
+from pathlib import Path
+
+from repro.core import spot_trace as tr
+from repro.core.faults import FaultPlan, TrainerCrash, check_invariants
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import ModelPerf
+from benchmarks.common import emit
+
+OUT = Path("experiments/bench")
+
+TRACE = [tr.TraceEvent(0.0, +4), tr.TraceEvent(300.0, -1),
+         tr.TraceEvent(600.0, +2)]
+
+
+def _cfg(quick: bool, *, ckpt_dir=None, crash_at=(), seed=3):
+    fp = FaultPlan(seed=seed, corrupt_p=0.02, prune_p=0.01, stall_p=0.02,
+                   stall_s=2.0, hard_kill_fraction=0.5, grace_s=2.0,
+                   trainer_crash_at=tuple(crash_at),
+                   trainer_stall_windows=((100.0, 50.0, 1.5),))
+    wl = dict(n_prompts=8 if quick else 24, group_size=4,
+              mean_response=800, max_response=2048, m_b=8)
+    # small chunks so a step's journal spans several: later checkpoints
+    # then demonstrate the incremental property (stable-prefix reuse)
+    return RunnerConfig(mode="rlboost", seed=seed, fault_plan=fp,
+                        ckpt_dir=ckpt_dir, chunk_bytes=1 << 10, **wl)
+
+
+def _run(cfg, perf, n_steps):
+    r = HybridRunner(cfg, perf)
+    r.load_trace(TRACE)
+    metrics = r.run(n_steps=n_steps)
+    return r, metrics
+
+
+def main(quick: bool = True):
+    perf = ModelPerf(n_params=7e9, n_active=7e9)
+    n_steps = 4 if quick else 8
+    d = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        # plain: no checkpointing
+        r0, m0 = _run(_cfg(quick), perf, n_steps)
+        ref = r0.journal.response_set()
+        t_plain = m0[-1]["step.t_end"]
+
+        # ckpt: every boundary, measure the overhead the clock was charged
+        r1, m1 = _run(_cfg(quick, ckpt_dir=d + "/a"), perf, n_steps)
+        t_ckpt = m1[-1]["step.t_end"]
+        over_s = m1[-1]["ckpt.overhead_s"]
+        ckpt_overhead_fraction = over_s / max(t_ckpt, 1e-9)
+        assert r1.journal.response_set() == ref, \
+            "checkpointing changed the completed-response set"
+
+        # crash + resume: kill inside the step after the 2nd boundary
+        crash_t = m0[1]["step.t_end"] + 5.0
+        cfg_crash = _cfg(quick, ckpt_dir=d + "/b", crash_at=(crash_t,))
+        r2 = HybridRunner(cfg_crash, perf)
+        r2.load_trace(TRACE)
+        try:
+            r2.run(n_steps=n_steps)
+            raise AssertionError("trainer crash never fired")
+        except TrainerCrash:
+            pass
+        r3 = HybridRunner.resume(
+            _cfg(quick, ckpt_dir=d + "/b", crash_at=(crash_t,)), perf)
+        r3.load_trace(TRACE)
+        m3 = r3.run(n_steps=n_steps)
+        t_resumed = m3[-1]["step.t_end"]
+        resume_throughput_ratio = t_plain / max(t_resumed, 1e-9)
+
+        # integrity gates: bit-identical set, exactly-once across crash
+        got = r3.journal.response_set()
+        integrity_gap = len(got ^ ref)
+        assert integrity_gap == 0, \
+            f"resume integrity gap: {integrity_gap} responses differ"
+        check_invariants(r3.manager, [], journal=r3.journal)
+
+        last = m1[-1]
+        out = dict(
+            n_steps=n_steps,
+            t_plain_s=t_plain, t_ckpt_s=t_ckpt, t_resumed_s=t_resumed,
+            ckpt_overhead_s=over_s,
+            ckpt_overhead_fraction=ckpt_overhead_fraction,
+            resume_throughput_ratio=resume_throughput_ratio,
+            integrity_gap=integrity_gap,
+            n_saves=last["ckpt.n_saves"],
+            n_chunks_written=last["ckpt.n_chunks_written"],
+            n_chunks_reused=last["ckpt.n_chunks_reused"],
+            bytes_written=last["ckpt.bytes_written"],
+            n_resumes=r3.registry.counters["recovery.n_resumes"],
+            n_trainer_crashes=r2.manager.fault_stats.n_trainer_crashes,
+            resumed_at_step=r3.metrics[0]["step.idx"] if r3.metrics else None,
+        )
+        emit("recovery.ckpt_overhead_fraction", ckpt_overhead_fraction)
+        emit("recovery.resume_throughput_ratio", resume_throughput_ratio)
+        emit("recovery.integrity_gap", float(integrity_gap))
+        emit("recovery.chunks_reused", float(last["ckpt.n_chunks_reused"]))
+        OUT.mkdir(parents=True, exist_ok=True)
+        (OUT / "recovery.json").write_text(json.dumps(out, indent=1))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -101,6 +101,19 @@ METRICS = [
     ("fault_handling.json", "chaos_throughput_ratio_hardkill",
      lambda d: d["chaos"]["hard_kill"]["1.0"] / d["chaos"]["hard_kill"]["0.0"],
      dict(rel=0.0, atol=0.30, direction="worse_below")),
+    # recovery plane (PR 8): both metrics run on the modeled event clock
+    # with a seeded FaultPlan, so they are deterministic.  The overhead
+    # fraction creeping up means checkpoints stopped being incremental
+    # (chunk dedup broke) or the blocking D2H snapshot grew; the resume
+    # ratio collapsing means a crash started costing more than the one
+    # partial step it destroys.  The bench itself asserts the integrity
+    # gap is exactly zero (bit-identical response set across the crash).
+    ("recovery.json", "recovery_ckpt_overhead_fraction",
+     lambda d: d["ckpt_overhead_fraction"],
+     dict(rel=0.50, atol=0.02, direction="worse_above")),
+    ("recovery.json", "recovery_resume_throughput_ratio",
+     lambda d: d["resume_throughput_ratio"],
+     dict(rel=0.0, atol=0.15, direction="worse_below")),
 ]
 
 

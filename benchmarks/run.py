@@ -14,7 +14,7 @@ import traceback
 
 from benchmarks import (bench_engine, bench_fault_handling, bench_integrity,
                         bench_kernels, bench_migration, bench_motivation,
-                        bench_obs, bench_response_length,
+                        bench_obs, bench_recovery, bench_response_length,
                         bench_seeding_ablation, bench_static_instances,
                         bench_trace_throughput, bench_transfer,
                         bench_weight_transfer, roofline)
@@ -30,6 +30,7 @@ BENCHES = [
     ("engine_horizon", bench_engine.main),
     ("migration", bench_migration.main),
     ("fig15_fault_handling", bench_fault_handling.main),
+    ("recovery_plane", bench_recovery.main),
     ("fig16_integrity", bench_integrity.main),
     ("obs_flight_recorder", bench_obs.main),
     ("kernels", bench_kernels.main),

@@ -67,6 +67,26 @@ def restore(path: str, like_state, shardings=None) -> Tuple[Any, Dict]:
     return state, sidecar
 
 
+def clean_orphans(ckpt_dir: str) -> int:
+    """Remove ``*.tmp.*`` files a crashed writer left behind.
+
+    A kill mid-``save`` can strand ``step_*.tmp.npz`` / ``.tmp.json``
+    files; they are never visible under a final name (atomic rename) but
+    waste disk and confuse directory listings.  Run on startup before
+    resuming — returns the number of files removed."""
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return 0
+    removed = 0
+    for f in list(d.glob("*.tmp.npz")) + list(d.glob("*.tmp.json")):
+        try:
+            os.remove(f)
+            removed += 1
+        except OSError:
+            pass
+    return removed
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     d = Path(ckpt_dir)
     if not d.exists():
@@ -91,6 +111,9 @@ class AsyncCheckpointer:
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        # crash semantics: sweep temp files a previous writer's death
+        # stranded (the visible step_* archives are atomic-rename safe)
+        self.n_orphans_cleaned = clean_orphans(ckpt_dir)
 
     def save(self, state, *, step: int, meta=None, block: bool = False):
         self.wait()

@@ -23,7 +23,14 @@ makes failure a first-class, *injectable*, *tested* input:
         (store history rolled / flaky source);
       - **per-fetch stalls** (``stall_p`` / ``stall_s``) and **per-agent
         flap windows** (``agent_flaps`` / ``flap_rate``): fetches from the
-        affected peer overrun their deadline and time out.
+        affected peer overrun their deadline and time out;
+      - **reserved-cluster faults** (recovery plane, PR 8): trainer-node
+        crashes (``trainer_crash_at`` — the loop raises
+        :class:`TrainerCrash`; resume from the last RunCheckpoint),
+        trainer straggler windows (``trainer_stall_windows`` multiply
+        modeled ``rl.step`` microbatch time), and torn checkpoint writes
+        (``torn_ckpt_p`` — atomic rename keeps the manifest consistent,
+        so restore falls back to the prior step).
 
   * :class:`PeerHealth` — per-agent failure counters with
     blacklist/probation, shared across every pull a manager owns, so a
@@ -67,7 +74,24 @@ FAULT_COUNTERS = (
     "n_export_truncated",     # groups whose export missed the window
     "n_kv_fallbacks",         # requests re-routed to re-prefill
     "n_pull_replans",         # weight pulls restarted after failure
+    # reserved-cluster rungs (recovery plane, PR 8)
+    "n_trainer_crashes",      # trainer-node kills (in-flight rl.step lost)
+    "n_trainer_stalled_mb",   # microbatches slowed by a straggler window
+    "n_torn_ckpt_writes",     # checkpoint chunks torn by the plan
+    "n_ckpt_fallbacks",       # restores that fell back past a bad ckpt
 )
+
+
+class TrainerCrash(RuntimeError):
+    """The reserved trainer node died: the event loop unwinds exactly like
+    the process would — in-flight ``rl.step`` state is lost, and the only
+    way forward is ``HybridRunner.resume`` from the last
+    :class:`~repro.checkpoint.recovery.RunCheckpoint`."""
+
+    def __init__(self, t: float, step: int):
+        super().__init__(f"trainer node crashed at t={t:.3f} (step {step})")
+        self.t = t
+        self.step = step
 
 
 class FaultStats:
@@ -153,6 +177,14 @@ class FaultPlan:
     # preemption severity
     hard_kill_fraction: float = 0.0  # P(grace_s == 0) per preemption
     grace_s: float = math.inf        # soft-preemption export window
+    # reserved-cluster faults (recovery plane): event times at which the
+    # trainer node dies (the loop raises TrainerCrash — resume from the
+    # last RunCheckpoint); straggler windows (t_start, duration, factor)
+    # multiply modeled rl.step microbatch time; torn_ckpt_p tears one
+    # freshly written checkpoint chunk per draw (restore falls back)
+    trainer_crash_at: Tuple[float, ...] = ()
+    trainer_stall_windows: Tuple[Tuple[float, float, float], ...] = ()
+    torn_ckpt_p: float = 0.0
     # per-agent flap windows: explicit (t_start, agent_index, duration_s)
     # triples, plus flap_rate synthesized flaps per agent over horizon_s
     agent_flaps: Tuple[Tuple[float, int, float], ...] = ()
@@ -195,6 +227,20 @@ class FaultPlan:
         return bytes([payload[0] ^ 0xFF]) + payload[1:]
 
     # ------------------------------------------------------------------ #
+    def trainer_slowdown(self, now: float) -> float:
+        """Straggler factor for an rl.step microbatch started at ``now``
+        (1.0 outside every ``trainer_stall_windows`` window)."""
+        f = 1.0
+        for t0, dur, factor in self.trainer_stall_windows:
+            if t0 <= now < t0 + dur:
+                f = max(f, float(factor))
+        return f
+
+    def torn_ckpt_write(self) -> bool:
+        """One draw per checkpoint save: tear a freshly written chunk?"""
+        return self.torn_ckpt_p > 0.0 and self._rng.rand() < self.torn_ckpt_p
+
+    # ------------------------------------------------------------------ #
     def agent_stall(self, agent_id: int, now: float) -> float:
         """Extra seconds a fetch from ``agent_id`` started at ``now`` takes
         (0 when the agent is not inside a flap window)."""
@@ -212,6 +258,11 @@ class FaultPlan:
                     flaps.append((t, idx, self.stall_s))
         for t, idx, dur in flaps:
             if not (0 <= idx < len(agents)):
+                continue
+            if t < loop.now:
+                # resumed clock: flaps strictly before the restored
+                # boundary already happened in the crashed timeline —
+                # re-firing them would stall agents that are healthy now
                 continue
             aid = agents[idx].id
             loop.at(t, lambda a=aid, d=dur: self._stalled.__setitem__(
@@ -260,7 +311,7 @@ def allocator_leak_report(engine) -> List[str]:
     return problems
 
 
-def check_invariants(manager, requests) -> Dict:
+def check_invariants(manager, requests, *, journal=None) -> Dict:
     """Assert the chaos contract after a run; returns a summary dict.
 
     Under any seeded :class:`FaultPlan`:
@@ -268,7 +319,12 @@ def check_invariants(manager, requests) -> Dict:
         duplicate ``on_complete`` deliveries);
       * nothing is stranded in the central queue or any instance's
         pending/importing sets;
-      * no live real engine leaks allocator pages or refcounts.
+      * no live real engine leaks allocator pages or refcounts;
+      * with a ``journal`` (a :class:`repro.checkpoint.recovery.RunJournal`
+        — pass the RESUMED runner's, which carries the checkpoint's
+        committed consumption plus everything trained after the restore):
+        exactly-once training consumption across any crash — no group's
+        samples consumed twice, none dropped.
     Raises :class:`ChaosInvariantError` with the full report otherwise.
     """
     problems: List[str] = []
@@ -290,11 +346,17 @@ def check_invariants(manager, requests) -> Dict:
         if inst.alive and inst.engine is not None:
             problems.extend(f"instance {inst.id}: {p}"
                             for p in allocator_leak_report(inst.engine))
+    if journal is not None:
+        problems.extend(journal.exactly_once_problems())
     if problems:
         raise ChaosInvariantError(
             "chaos invariants violated:\n  " + "\n  ".join(problems))
-    return dict(n_requests=len(requests),
-                n_preemptions=manager.n_preemptions,
-                n_migrations=manager.n_migrations,
-                n_restarts=manager.n_restarts,
-                **manager.fault_stats.as_dict())
+    out = dict(n_requests=len(requests),
+               n_preemptions=manager.n_preemptions,
+               n_migrations=manager.n_migrations,
+               n_restarts=manager.n_restarts,
+               **manager.fault_stats.as_dict())
+    if journal is not None:
+        out["n_journal_completed"] = len(journal.completed)
+        out["n_journal_trained"] = len(journal.trained)
+    return out

@@ -78,6 +78,13 @@ class RunnerConfig:
     # Metrics are ALWAYS on: run() returns registry snapshots either way.
     trace: bool = False
     trace_capacity: int = 65536
+    # recovery plane: RunCheckpoint directory (None = no checkpointing).
+    # Checkpoints are taken at step boundaries every ckpt_every steps;
+    # the payload rides the content-addressed chunk plane, keeping the
+    # newest ckpt_keep manifests (older chunks GC once unreferenced).
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 1
+    ckpt_keep: int = 3
 
 
 class HybridRunner:
@@ -85,14 +92,28 @@ class HybridRunner:
                  engine_factory: Optional[Callable] = None,
                  train_fn: Optional[Callable[[List[Request]], None]] = None,
                  publish_fn: Optional[Callable[[], object]] = None,
-                 request_factory: Optional[Callable[[int, int], Request]] = None):
+                 request_factory: Optional[Callable[[int, int], Request]] = None,
+                 trainer_state_fn: Optional[Callable] = None,
+                 trainer_restore_fn: Optional[Callable] = None,
+                 resume_t: float = 0.0):
         self.cfg = cfg
         self.perf = perf
         self.model_cfg = model_cfg
         self.train_fn = train_fn
         self.publish_fn = publish_fn
         self.request_factory = request_factory
+        # recovery plane: trainer_state_fn() -> (pytree, meta) supplies the
+        # trainer payload a RunCheckpoint carries; trainer_restore_fn(flat,
+        # meta) reinstalls it on resume.  The sim backend runs without
+        # either (its checkpoint is journal + run state only).
+        self.trainer_state_fn = trainer_state_fn
+        self.trainer_restore_fn = trainer_restore_fn
         self.loop = EventLoop()
+        # resumed runs restart the event clock AT the restored boundary —
+        # set before anything (fault plan, traces) can schedule events, so
+        # no heap entry ever sits in the resumed clock's past
+        self.loop.now = max(resume_t, 0.0)
+        self._resumed = resume_t > 0.0
         # flight recorder: one registry for the whole run; the tracer
         # records on the event clock when cfg.trace is set (NULL_TRACER
         # otherwise — instrumented paths cost one no-op call)
@@ -130,6 +151,19 @@ class HybridRunner:
             registry=self.registry, tracer=self.tracer)
         if cfg.fault_plan is not None:
             cfg.fault_plan.install(self.loop, self.store.agents)
+            # reserved-cluster faults: schedule trainer-node crashes on
+            # the event clock.  A resumed run replays the same plan, so
+            # crashes in the resumed clock's past are skipped AND the
+            # earliest still-pending one is consumed — it is the crash
+            # that killed the timeline we are resuming from (the
+            # checkpoint predates it by construction)
+            crashes = sorted(
+                t for t in getattr(cfg.fault_plan, "trainer_crash_at", ())
+                if t > self.loop.now or not self._resumed)
+            if self._resumed and crashes:
+                crashes = crashes[1:]
+            for t in crashes:
+                self.loop.at(t, self._trainer_crash)
         self.scheduler = SeedingScheduler(
             n_resv=cfg.n_local_engines * cfg.n_reserved_nodes,
             eta=cfg.eta, t_init=cfg.t_seed_init,
@@ -159,11 +193,28 @@ class HybridRunner:
         self.metrics: List[Dict] = []
         self.step_idx = 0
 
+        # recovery plane: the rollout journal records every completed
+        # response and each training consumption; a RunCheckpoint
+        # snapshots it (with trainer + run state) at step boundaries
+        from repro.checkpoint.recovery import RecoveryStore, RunJournal
+        self.journal = RunJournal()
+        self.recovery = (RecoveryStore(cfg.ckpt_dir,
+                                       chunk_bytes=cfg.chunk_bytes,
+                                       keep=cfg.ckpt_keep,
+                                       registry=self.registry,
+                                       faults=cfg.fault_plan)
+                         if cfg.ckpt_dir else None)
+        self._last_ckpt_step = -1
+
     # ------------------------------------------------------------------ #
     # trace / capacity handling
     # ------------------------------------------------------------------ #
     def load_trace(self, events: List[TraceEvent]):
         for e in events:
+            if self._resumed and e.t <= self.loop.now:
+                # a resumed run restores the boundary's net capacity from
+                # the checkpoint; replaying past deltas would double-count
+                continue
             self.loop.at(e.t, lambda d=e.delta: self._capacity_change(d))
 
     def _capacity_change(self, delta: int):
@@ -313,6 +364,7 @@ class HybridRunner:
     # training consumption
     # ------------------------------------------------------------------ #
     def _on_complete(self, r: Request):
+        self.journal.record_complete(r, step=self.step_idx)
         self.collector.add(r)
         if all(x.done for x in self._step_requests):
             self._rollout_done = True
@@ -342,10 +394,19 @@ class HybridRunner:
                                   internode_penalty=(
                                       1.15 if self.cfg.n_reserved_nodes > 1
                                       else 1.0))
+        slow = 1.0
+        if self.cfg.fault_plan is not None:
+            # reserved-cluster straggler window: the modeled rl.step
+            # microbatch slows by the plan's factor while inside it
+            slow = self.cfg.fault_plan.trainer_slowdown(self.loop.now)
+            if slow > 1.0:
+                self.manager.fault_stats.n_trainer_stalled_mb += 1
+        dt *= slow
         self._trainer_busy = True
         mb_span = self.tracer.begin("train.microbatch", "trainer",
                                     parent=self._step_span,
-                                    n_samples=len(mb), tokens=tokens)
+                                    n_samples=len(mb), tokens=tokens,
+                                    slowdown=slow)
 
         def done(mb=mb, dt=dt):
             self._trainer_busy = False
@@ -354,6 +415,11 @@ class HybridRunner:
             self._idle_since = self.loop.now
             if self.train_fn is not None:
                 self.train_fn(mb)
+            # journal the consumption — it COMMITS when a later
+            # checkpoint snapshots it (a crash before that boundary
+            # discards the training along with the params it updated,
+            # and the resumed run re-trains exactly these groups)
+            self.journal.record_trained(mb)
             self.tracer.end(mb_span)
             self._try_train()
         self.loop.schedule(dt, done)
@@ -411,6 +477,111 @@ class HybridRunner:
         self._reconcile()                    # N_prem may have changed
 
     # ------------------------------------------------------------------ #
+    # recovery plane: crash-consistent whole-run checkpoint / resume
+    # ------------------------------------------------------------------ #
+    def _trainer_crash(self):
+        from repro.core.faults import TrainerCrash
+        self.manager.fault_stats.n_trainer_crashes += 1
+        self.tracer.event("trainer.crash", "trainer", step=self.step_idx)
+        # the exception unwinds EventLoop.run — exactly what a dead
+        # trainer process does to the run.  Everything in flight is lost;
+        # the caller's only move is HybridRunner.resume(cfg, perf).
+        raise TrainerCrash(self.loop.now, self.step_idx)
+
+    def _run_state(self, trainer_meta: Dict) -> Dict:
+        from repro.checkpoint.recovery import rng_state_to_json
+        return dict(
+            step_idx=self.step_idx,
+            t=self.loop.now,
+            version=self.store.version,
+            capacity=self.capacity,
+            next_req_id=self._next_req_id,
+            next_group=self._next_group,
+            next_instance_id=self.manager._next_instance_id,
+            next_mig_id=self.manager._next_mig_id,
+            spot_seconds=self.manager.spot_seconds,
+            rng=rng_state_to_json(self.rng),
+            scheduler=self.scheduler.state_dict(),
+            collector=self.collector.state_dict(),
+            trainer_meta=trainer_meta)
+
+    def _save_checkpoint(self) -> float:
+        """Write a RunCheckpoint at the current step boundary; returns the
+        modeled blocking overhead (the trainer-state D2H snapshot) to
+        charge the event clock."""
+        from repro.transfer.chunkstore import flatten_params
+        trainer_tree, trainer_meta = (self.trainer_state_fn()
+                                      if self.trainer_state_fn is not None
+                                      else (None, {}))
+        payload = self.journal.payload_leaves()
+        if trainer_tree is not None:
+            for k, v in flatten_params(trainer_tree).items():
+                payload[f"trainer:{k}"] = v
+        t_over = self.perf.weight_bytes / self.cfg.snapshot_d2h_bw
+        span = self.tracer.begin("ckpt.write", "trainer",
+                                 step=self.step_idx)
+        stats = self.recovery.save(self.step_idx,
+                                   self._run_state(trainer_meta), payload)
+        if stats["torn"]:
+            self.manager.fault_stats.n_torn_ckpt_writes += 1
+        self.tracer.end(span, t1=self.loop.now + t_over, **stats)
+        self._last_ckpt_step = self.step_idx
+        self.registry.inc("ckpt.overhead_s", t_over)
+        return t_over
+
+    def restore(self, ckpt) -> "HybridRunner":
+        """Reinstall a RunCheckpoint's state at its step boundary.  The
+        runner must have been constructed with ``resume_t=ckpt.t`` (the
+        ``resume`` classmethod does this) so no event predates the clock."""
+        from repro.checkpoint.recovery import (RunJournal,
+                                               rng_state_from_json)
+        rs = ckpt.run_state
+        self.loop.now = max(self.loop.now, float(rs["t"]))
+        self.step_idx = int(rs["step_idx"])
+        self._last_ckpt_step = self.step_idx
+        self.store.version = int(rs["version"])
+        self.manager.required_version = int(rs["version"])
+        self.capacity = int(rs["capacity"])
+        self._next_req_id = int(rs["next_req_id"])
+        self._next_group = int(rs["next_group"])
+        self.manager._next_instance_id = int(rs["next_instance_id"])
+        self.manager._next_mig_id = int(rs["next_mig_id"])
+        self.manager.spot_seconds = float(rs["spot_seconds"])
+        rng_state_from_json(self.rng, rs["rng"])
+        self.scheduler.load_state(rs["scheduler"])
+        self.collector.load_state(rs["collector"])
+        self.journal = RunJournal.from_leaves(ckpt.payload)
+        trainer_flat = ckpt.trainer_flat()
+        if self.trainer_restore_fn is not None and trainer_flat:
+            self.trainer_restore_fn(trainer_flat,
+                                    rs.get("trainer_meta", {}))
+        self._resumed = True
+        self.registry.inc("recovery.n_resumes")
+        self.tracer.event("recovery.resume", "trainer",
+                          step=self.step_idx, t=self.loop.now)
+        return self
+
+    @classmethod
+    def resume(cls, cfg: RunnerConfig, perf: ModelPerf,
+               step: Optional[int] = None, **kwargs) -> "HybridRunner":
+        """Rebuild a runner from the newest (or requested) RunCheckpoint
+        in ``cfg.ckpt_dir``.  Pass the same seed and a replayed FaultPlan:
+        the resumed run then completes with a completed-response set
+        bit-identical to the uninterrupted run's (the resume determinism
+        contract — see tests/test_recovery.py)."""
+        from repro.checkpoint.recovery import RecoveryStore
+        assert cfg.ckpt_dir, "resume requires cfg.ckpt_dir"
+        store = RecoveryStore(cfg.ckpt_dir, chunk_bytes=cfg.chunk_bytes,
+                              keep=cfg.ckpt_keep)
+        ckpt = store.load(step)
+        runner = cls(cfg, perf, resume_t=ckpt.t, **kwargs)
+        if store.n_fallbacks:
+            runner.registry.inc("faults.n_ckpt_fallbacks",
+                                store.n_fallbacks)
+            runner.registry.inc("recovery.n_fallbacks")
+        return runner.restore(ckpt)
+
+    # ------------------------------------------------------------------ #
     def run(self, *, n_steps: Optional[int] = None,
             duration: Optional[float] = None) -> List[Dict]:
         """Run steps back-to-back until n_steps or virtual duration.
@@ -429,6 +600,22 @@ class HybridRunner:
                     or (duration is not None and self.loop.now >= duration)):
                 self.loop.stop()
                 return
+            if (self.recovery is not None and self.step_idx > 0
+                    and self.step_idx % self.cfg.ckpt_every == 0
+                    and self.step_idx != self._last_ckpt_step):
+                # step boundary: all of the previous step's groups are
+                # completed AND consumed, the scheduler has updated, and
+                # the next step's RNG draws have not happened — the one
+                # point where a snapshot is crash-consistent by
+                # construction.  The blocking D2H part charges the event
+                # clock; chunk I/O overlaps (AsyncCheckpointer semantics).
+                t_over = self._save_checkpoint()
+                if t_over > 0.0:
+                    self.loop.schedule(t_over, start_one)
+                    return
+            start_one()
+
+        def start_one():
             self.start_step()
             wait_done()
 

@@ -114,6 +114,10 @@ class RolloutInstance:
         busy — a stall bucket means the transfer is why no work runs."""
         if self.account.closed_at is not None:
             return
+        if not self.alive:
+            # a dying instance sits in its preemption-grace window until
+            # the kill lands — no scheduling edge may reclassify the lane
+            return
         now = self.loop.now
         if self._step_scheduled:
             self.account.transition("busy", now, split=self._next_split)
@@ -203,7 +207,7 @@ class RolloutInstance:
 
     # ---------------- KV-page migration (source side) ---------------- #
     def export_kv_requests(self, reqs: List[Request],
-                           budget_s: Optional[float] = None):
+                           budget_s: Optional[float] = None) -> float:
         """Publish the KV state of ``reqs`` on the chunk plane (sets
         ``r.kv``).  One :class:`KVExport` per GRPO group, so co-migrating
         siblings ship their shared prompt pages once.  Requests whose
@@ -215,25 +219,31 @@ class RolloutInstance:
         (:meth:`ModelPerf.kv_export_time`) from the budget, and a group
         whose export no longer fits is TRUNCATED — its requests take the
         re-prefill path (paper-faithful: a spot notice is seconds, not a
-        promise to finish arbitrary copies)."""
+        promise to finish arbitrary copies).
+
+        Returns the total modeled seconds the published exports spent:
+        the preemption path holds the dying lane in the ``grace``
+        accounting bucket for exactly that long before the kill lands."""
         mgr = self.manager
         if mgr.migration == "recompute":
-            return
+            return 0.0
         by_group: Dict[int, List[Request]] = {}
         for r in reqs:
             by_group.setdefault(r.group, []).append(r)
         remaining = budget_s
+        spent = 0.0
         for grp in by_group.values():
+            kv_tokens = (sum(r.total_len for r in grp)
+                         - (len(grp) - 1) * grp[0].prompt_len)
+            t = mgr.perf.kv_export_time(self.cfg, kv_tokens)
             if remaining is not None:
-                kv_tokens = (sum(r.total_len for r in grp)
-                             - (len(grp) - 1) * grp[0].prompt_len)
-                t = mgr.perf.kv_export_time(self.cfg, kv_tokens)
                 if t > remaining:
                     mgr.fault_stats.n_export_truncated += 1
                     continue
                 remaining -= t
             export = self._export_group(grp)
             if export is not None:
+                spent += t
                 self.published_exports.append(export)
                 self.tracer.event(
                     "migrate.export", self.lane, inst=self.id,
@@ -242,6 +252,7 @@ class RolloutInstance:
                 for r in grp:
                     if r.id in export.req_ids:
                         r.kv = export
+        return spent
 
     def _export_group(self, grp: List[Request]) -> Optional[KVExport]:
         mgr = self.manager
@@ -462,6 +473,31 @@ class RolloutInstance:
                 for o in sibs[:max(self._room() - 1, 0)]:
                     self.pending.remove(o)
                     group.append(o)
+            if self.engine is not None:
+                # admit on the engine FIRST: a bounded page pool
+                # (max_pool_pages) rejects with AdmissionError when growth
+                # would bust the cap — backpressure, not a crash.  The
+                # group returns to the queue head and admission retries
+                # when a completion frees pages.
+                from repro.rl.sampler import request_key
+                from repro.serving.engine import AdmissionError
+                try:
+                    if len(group) > 1:
+                        self.engine.add_group(
+                            [(x.id, request_key(x.seed, x.id), x.max_total)
+                             for x in group],
+                            list(r.prompt_ids or []), r.prompt_len)
+                    else:
+                        self.engine.add_request(
+                            r.id, r.context_ids(),
+                            request_key(r.seed, r.id), r.max_total,
+                            r.prompt_len)
+                except AdmissionError:
+                    reg = getattr(self.manager, "registry", None)
+                    if reg is not None:
+                        reg.inc("engine.n_admission_backpressure")
+                    self.pending[0:0] = group
+                    break
             for x in group:
                 x.status = Status.EXECUTING
                 self.executing[x.id] = x
@@ -476,17 +512,6 @@ class RolloutInstance:
                 ModelPerf.chunked_prefill_prefix_tokens(r.total_len, chunk)
             if r.n_generated > 0:
                 self.manager.n_prefill_migrations += 1
-            if self.engine is not None:
-                from repro.rl.sampler import request_key
-                if len(group) > 1:
-                    self.engine.add_group(
-                        [(x.id, request_key(x.seed, x.id), x.max_total)
-                         for x in group],
-                        list(r.prompt_ids or []), r.prompt_len)
-                else:
-                    self.engine.add_request(
-                        r.id, r.context_ids(),
-                        request_key(r.seed, r.id), r.max_total, r.prompt_len)
 
     def _kick(self):
         self._admit()

@@ -55,3 +55,16 @@ class MicrobatchCollector:
         self._groups.clear()
         self._ready.clear()
         self.completed_groups = 0
+
+    # recovery plane: at a step boundary every group is collected and
+    # consumed, so _groups/_ready are empty by construction — the counter
+    # is the only state a RunCheckpoint needs to carry.
+    def state_dict(self) -> Dict:
+        assert not self._groups and not self._ready, \
+            "collector checkpointed off a step boundary"
+        return dict(completed_groups=self.completed_groups)
+
+    def load_state(self, state: Dict):
+        self._groups.clear()
+        self._ready.clear()
+        self.completed_groups = int(state["completed_groups"])

@@ -343,15 +343,8 @@ class RolloutManager:
             grace_s = (self.faults.preemption_grace()
                        if self.faults is not None else math.inf)
         hard = grace_s <= 0.0
-        # the grace notice is an instant on today's clock (export time is
-        # budgeted from the window, the kill lands at one event time), so
-        # the account's grace bucket stays 0 and the lane shows the
-        # notice as an instant span — ROADMAP "Telemetry plane" notes
-        self.tracer.event("preempt.grace", f"inst:{inst.id}", inst=inst.id,
-                          grace_s=(None if math.isinf(grace_s) else grace_s),
-                          hard=hard)
-        inst.preempt()
-        if inst.pull is not None:
+        inst.preempt()                 # alive=False NOW: capacity frees,
+        if inst.pull is not None:      # the balancer skips the lane
             inst.pull.cancel()
             self.tracer.end(inst.pull.parent_span, outcome="cancelled")
             inst.pull = None
@@ -359,6 +352,7 @@ class RolloutManager:
             self._orphan_caches.append(inst.chunk_cache)
         self.spot_seconds += self.loop.now - inst.created_t
         self.n_preemptions += 1
+        spent = 0.0
         if hard:
             # the VM is gone NOW: no export is published, and exports this
             # host published EARLIER lose their source blobs — cancel every
@@ -371,8 +365,8 @@ class RolloutManager:
             # blob map is a host copy published to a survivable store, so
             # it stays fetchable after the engine (and its page pool) are
             # gone
-            inst.export_kv_requests(list(inst.executing.values()),
-                                    budget_s=grace_s)
+            spent = inst.export_kv_requests(list(inst.executing.values()),
+                                            budget_s=grace_s)
         victims = inst.drain_all()
         for r in victims:
             if self.fault_mode == "recompute":
@@ -392,10 +386,42 @@ class RolloutManager:
             r.status = Status.QUEUED
             r.instance_id = None
             self.queued.append(r)
+        if spent > 0.0:
+            # the notice window has a real modeled duration: the host
+            # spends it copying KV out, so the lane sits in the ``grace``
+            # accounting bucket (a true span, not an instant) until the
+            # kill lands.  The VM bills until then, and the kill — account
+            # retirement, lane removal — is a scheduled future event.
+            # Victims already requeued: survivors pick them up while the
+            # dying host finishes its copies.
+            span = self.tracer.begin(
+                "preempt.grace", f"inst:{inst.id}", inst=inst.id,
+                grace_s=(None if math.isinf(grace_s) else grace_s),
+                spent_s=spent, hard=hard)
+            inst.account.transition("grace", self.loop.now)
+            self.spot_seconds += spent
+            self.loop.schedule(
+                spent, lambda: self._finish_preempt(inst, span, hard))
+        else:
+            # nothing to copy (hard kill / no exportable state): the
+            # notice collapses to an instant and the kill lands now
+            self.tracer.event(
+                "preempt.grace", f"inst:{inst.id}", inst=inst.id,
+                grace_s=(None if math.isinf(grace_s) else grace_s),
+                hard=hard)
+            self._finish_preempt(inst, None, hard)
+        self._dispatch()
+
+    def _finish_preempt(self, inst: RolloutInstance, span, hard: bool):
+        """The kill lands: retire the dying lane's ledger and remove it.
+        Runs ``spent`` seconds after the notice when exports had a modeled
+        duration, immediately otherwise."""
+        if span is not None:
+            self.tracer.end(span)
         self.tracer.event("instance.dead", f"inst:{inst.id}", inst=inst.id,
                           cause=("hard_kill" if hard else "preempt"))
         self._retire_account(inst)
-        del self.instances[inst.id]
+        self.instances.pop(inst.id, None)
         self._dispatch()
 
     def _kill_source_exports(self, src: RolloutInstance):

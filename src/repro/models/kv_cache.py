@@ -53,10 +53,13 @@ class PagedKVAllocator:
     sharer writes into it.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int,
+                 max_pages: Optional[int] = None):
         assert num_pages >= 2 and page_size >= 1
+        assert max_pages is None or max_pages >= num_pages
         self.page_size = page_size
         self.num_pages = num_pages              # includes the garbage page 0
+        self.max_pages = max_pages              # growth cap (None = unbounded)
         self.ref = np.zeros((num_pages,), np.int32)
         # LIFO free list, page 0 reserved as garbage
         self._free = list(range(num_pages - 1, 0, -1))
@@ -167,12 +170,23 @@ class PagedKVAllocator:
         return copies
 
     # ------------------------------------------------------------------ #
-    def grow(self, new_num_pages: int):
-        assert new_num_pages > self.num_pages
+    def grow(self, new_num_pages: int) -> int:
+        """Extend the pool to ``new_num_pages`` (clamped to ``max_pages``
+        when a cap is set).  Raises :class:`OutOfPages` when the pool is
+        already at its cap — callers surface that as admission
+        backpressure rather than doubling without bound.  Returns the
+        actual new pool size."""
+        if self.max_pages is not None:
+            new_num_pages = min(new_num_pages, self.max_pages)
+        if new_num_pages <= self.num_pages:
+            raise OutOfPages(
+                f"page pool at max_pages={self.max_pages} cap "
+                f"({self.num_pages} pages, {self.n_free} free)")
         self._free.extend(range(new_num_pages - 1, self.num_pages - 1, -1))
         self.ref = np.concatenate(
             [self.ref, np.zeros((new_num_pages - self.num_pages,), np.int32)])
         self.num_pages = new_num_pages
+        return self.num_pages
 
 
 def attn_cache_shape(cfg, mixer: str, batch: int, slab_len: int):

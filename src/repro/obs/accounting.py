@@ -30,11 +30,15 @@ Mechanics — event-driven state machine, zero per-token cost:
   * busy intervals split into prefill/decode pro-rata against the
     scheduled step's modeled ``(t_decode, t_prefill)``, so a preemption
     mid-step still lands the partial interval in the right buckets.
-  * ``grace`` is 0.0 on today's clock: preemption notice handling is
-    modeled as instantaneous (the export *budget* is spent from the
-    notice window, but the kill itself happens at one event time), so
-    the bucket exists for the identity and the Perfetto lane shows the
-    notice as an instant span.  See ROADMAP "Telemetry plane" notes.
+  * ``grace`` is the preemption notice window with a real modeled
+    duration (recovery plane, PR 8): when a soft-preempted instance
+    publishes KV exports, it spends their summed modeled export time
+    (:meth:`ModelPerf.kv_export_time`) in the ``grace`` state — the
+    notice arrives, victims requeue to survivors immediately, and the
+    dying lane sits in grace (a true ``preempt.grace`` span on the
+    Perfetto lane) until the kill lands and retires the account.  A hard
+    kill, or a preemption with nothing exportable, still collapses to an
+    instant event with a zero grace bucket.
 """
 
 from __future__ import annotations

@@ -38,7 +38,7 @@ class RealRLHarness:
                  dataset: Optional[MathTaskDataset] = None,
                  page_size: int = 16, prefill_chunk: int = 256,
                  staleness_limit: Optional[int] = None,
-                 engine_tracer=None):
+                 engine_tracer=None, resume: bool = False):
         # flight recorder, real backend: the engines' work is WALL time,
         # so they record into their own wall-clock Tracer (pass one in to
         # enable; the sim-side event-clock tracer is runner_cfg.trace)
@@ -83,12 +83,26 @@ class RealRLHarness:
             transfer_gbps_scale=52.0,
             chunk_bytes=1 << 14)   # tiny params -> still multi-chunk pulls
         self.rc = runner_cfg
-        self.runner = HybridRunner(
-            runner_cfg, perf, model_cfg=model_cfg,
+        runner_kwargs = dict(
+            model_cfg=model_cfg,
             engine_factory=self._engine_factory,
             train_fn=self._train_fn,
             publish_fn=self._publish_fn,
-            request_factory=self._request_factory)
+            request_factory=self._request_factory,
+            # recovery plane: the RunCheckpoint's trainer payload is
+            # params + optimizer + the pending grad accumulator (grads
+            # accumulate across the step and apply at the NEXT publish,
+            # so at a boundary _accum is live state)
+            trainer_state_fn=self._trainer_state_fn,
+            trainer_restore_fn=self._trainer_restore_fn)
+        if resume:
+            # rebuild from the newest RunCheckpoint in runner_cfg.ckpt_dir
+            # (same model seed: init_params above gives the LIKE tree the
+            # restore unflattens into, then real values overwrite it)
+            self.runner = HybridRunner.resume(runner_cfg, perf,
+                                              **runner_kwargs)
+        else:
+            self.runner = HybridRunner(runner_cfg, perf, **runner_kwargs)
         # staleness spans surface under the registry's dotted names as a
         # lazy view — snapshot values ARE the legacy self.staleness list
         self.runner.registry.register_view("rl.staleness",
@@ -102,6 +116,40 @@ class RealRLHarness:
             mean=float(np.mean([s["mean"] for s in self.staleness])),
             max=int(max(s["max"] for s in self.staleness)),
             n_stale_filtered=self.n_stale_filtered)
+
+    # ------------------------------------------------------------------ #
+    # recovery plane: trainer payload of the RunCheckpoint
+    # ------------------------------------------------------------------ #
+    def _trainer_state_fn(self):
+        tree = {"params": self.params, "opt": self.opt}
+        if self._accum is not None:
+            tree["accum"] = self._accum
+        meta = dict(n_accum=self._n_accum,
+                    step_rewards=list(self.step_rewards),
+                    reward_buf=[float(x) for x in self._reward_buf],
+                    n_stale_filtered=self.n_stale_filtered)
+        return tree, meta
+
+    def _trainer_restore_fn(self, flat, meta):
+        """Unflatten the checkpoint's ``trainer:*`` leaves back into the
+        params/opt/accum pytrees.  ``self.params``/``self.opt`` from
+        ``__init__`` provide the LIKE structure; values are overwritten."""
+        like = {"params": self.params, "opt": self.opt}
+        if any(k.startswith("['accum']") for k in flat):
+            like["accum"] = self.params          # grads share the structure
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for p, leaf in paths:
+            arr = np.asarray(flat[jax.tree_util.keystr(p)])
+            out.append(jnp.asarray(arr.astype(np.asarray(leaf).dtype)))
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        self.params = tree["params"]
+        self.opt = tree["opt"]
+        self._accum = tree.get("accum")
+        self._n_accum = int(meta.get("n_accum", 0))
+        self.step_rewards = list(meta.get("step_rewards", []))
+        self._reward_buf = list(meta.get("reward_buf", []))
+        self.n_stale_filtered = int(meta.get("n_stale_filtered", 0))
 
     # ------------------------------------------------------------------ #
     def _engine_factory(self):

@@ -281,7 +281,7 @@ class InferenceEngine:
                  weight_version: int = 0, page_size: int = 16,
                  prefill_chunk: int = 256, max_context: Optional[int] = None,
                  horizon: int = 1, use_pallas: Optional[bool] = None,
-                 tracer=None):
+                 max_pool_pages: Optional[int] = None, tracer=None):
         """``slab_len`` sizes the initial pool (max_batch * slab_len tokens)
         and the local-attention ring width; unlike the old dense slab it is
         NOT a hard length cap — pages are allocated (and the pool grown) on
@@ -321,7 +321,11 @@ class InferenceEngine:
         # layers; models with SSM/ring state prefill each context in one chunk
         self._chunkable = all(m == "global" for m in mixers)
         num_pages = max(2 * (max_batch * slab_len) // page_size, 8) + 1
-        self.alloc = PagedKVAllocator(num_pages, page_size)
+        if max_pool_pages is not None:
+            num_pages = max(min(num_pages, int(max_pool_pages)), 2)
+        self.max_pool_pages = max_pool_pages
+        self.alloc = PagedKVAllocator(num_pages, page_size,
+                                      max_pages=max_pool_pages)
         self.cache = kvc.init_paged_cache(cfg, max_batch, num_pages,
                                           page_size, ring_len=slab_len,
                                           dtype=jnp.float32)
@@ -399,6 +403,33 @@ class InferenceEngine:
                 raise AdmissionError(
                     f"context {max(L, max_total)} exceeds max_context "
                     f"{self.max_context}")
+        if self.max_pool_pages is not None:
+            # commitment-based admission (the watermark a bounded pool
+            # needs): every resident request reserves its WORST-CASE page
+            # count up front, so decode can always reserve its write
+            # window without growing past the cap.  Conservative — shared
+            # group prompts are counted per sibling — which is the point:
+            # admission may under-fill, decode must never die.
+            usable = self.max_pool_pages - 1          # page 0 = garbage
+            need = need_slots * self.alloc.pages_for(max_total)
+            if self._committed_pages() + need > usable:
+                raise AdmissionError(
+                    f"page pool cap: need {need} pages for "
+                    f"{need_slots} slot(s), "
+                    f"{usable - self._committed_pages()} uncommitted of "
+                    f"{usable} (max_pool_pages={self.max_pool_pages})")
+
+    def _committed_pages(self) -> int:
+        """Worst-case pages promised to resident requests (active slots +
+        waiting prefill rows), each counted to its ``max_total``."""
+        pages = 0
+        for slot, s in enumerate(self.slots):
+            if s is not None:
+                pages += self.alloc.pages_for(int(self.maxtot_buf[slot]))
+        for row in self.waiting:
+            for (_rid, _key, max_total, _np, _slot) in row.members:
+                pages += self.alloc.pages_for(max_total)
+        return pages
 
     def _alloc_table(self, n_tokens: int) -> List[int]:
         while True:
@@ -425,9 +456,16 @@ class InferenceEngine:
         return copies
 
     def _grow_pool(self):
-        new_num = 2 * self.alloc.num_pages
+        """Double the page pool, bounded by ``max_pool_pages``.  At the
+        cap the engine stops growing and surfaces ``AdmissionError``
+        backpressure instead of doubling without bound (the real-engine
+        host-OOM failure mode): callers keep the request pending and
+        admission recovers once completions free pages."""
+        try:
+            new_num = self.alloc.grow(2 * self.alloc.num_pages)
+        except OutOfPages as e:
+            raise AdmissionError(str(e)) from e
         self.cache = kvc.grow_pool(self.cache, new_num)
-        self.alloc.grow(new_num)
 
     def _free_slot(self, slot: int):
         st = self.slots[slot]
@@ -455,9 +493,11 @@ class InferenceEngine:
         continuation)."""
         L = len(token_ids)
         self._check_admission(L, max_total)
+        # pages before the slot: a capped pool rejecting here must not
+        # leak the slot reservation
+        table = self._alloc_table(L)
         slot = self._reserve_slot(req_id)
         key_data = np.asarray(jax.random.key_data(key), np.uint32)
-        table = self._alloc_table(L)
         self.waiting.append(_WaitRow(
             token_ids=list(token_ids), table=table,
             members=[(req_id, key_data, max_total, n_prompt, slot)]))
@@ -811,7 +851,11 @@ class InferenceEngine:
                 fresh = self.alloc.alloc(len(used))
                 break
             except OutOfPages:
-                self._grow_pool()
+                try:
+                    self._grow_pool()
+                except AdmissionError:
+                    self.tracer.end(span, outcome="rejected")
+                    raise
         page_map = dict(zip(used, fresh))
         if used:
             # select the referenced pages from the payload (group-stacked

@@ -17,6 +17,12 @@ sha256 of its content, so:
 ``synthetic_manifest`` fabricates the same structure from a byte count
 alone so the analytic sim backend pulls through the identical chunk
 scheduler (digests are deterministic pseudo-ids, payload fetches no-op).
+
+The same plane carries more than weights: run checkpoints
+(``repro.checkpoint.recovery``) serialize their journal + trainer payload
+through ``build_manifest``/``assemble_manifest`` with ``codec='none'``,
+inheriting chunk-level dedup (incremental checkpoints re-write only
+changed chunks) and checksum-verified reassembly for free.
 """
 
 from __future__ import annotations

@@ -72,3 +72,60 @@ def test_latest_step_and_gc(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 3
     import glob
     assert len(glob.glob(str(tmp_path / "step_*.json"))) == 2  # gc'd to keep
+
+
+# --------------------------------------------------------------------------- #
+# crash semantics (recovery plane satellite)
+# --------------------------------------------------------------------------- #
+def test_kill_mid_write_never_exposes_torn_archive(tmp_path, monkeypatch):
+    """A writer dying inside np.savez leaves bytes only under the tmp
+    name — no corrupt ``step_*`` archive is ever visible, and the prior
+    checkpoint stays loadable."""
+    cfg, state = _tiny_state()
+    ckpt.save(str(tmp_path / "step_00000001"), state["params"], step=1)
+
+    real_savez = np.savez
+
+    def dying_savez(path, **arrs):
+        real_savez(path, **arrs)           # tmp bytes hit the disk...
+        raise KeyboardInterrupt("kill -9")  # ...and the process dies here
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    try:
+        ckpt.save(str(tmp_path / "step_00000002"), state["params"], step=2)
+    except KeyboardInterrupt:
+        pass
+    monkeypatch.setattr(np, "savez", real_savez)
+    # nothing torn under a final name; the orphan sits under .tmp.*
+    assert not (tmp_path / "step_00000002.npz").exists()
+    assert not (tmp_path / "step_00000002.json").exists()
+    assert list(tmp_path.glob("*.tmp.npz"))
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    restored, side = ckpt.restore(str(tmp_path / "step_00000001"),
+                                  state["params"])
+    assert side["step"] == 1
+
+
+def test_orphaned_tmp_files_cleaned_on_startup(tmp_path):
+    (tmp_path / "step_00000009.tmp.npz").write_bytes(b"half a checkpoint")
+    (tmp_path / "step_00000009.tmp.json").write_text("{")
+    ck = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    assert ck.n_orphans_cleaned == 2
+    assert not list(tmp_path.glob("*.tmp.*"))
+    # idempotent, and safe on a directory that does not exist yet
+    assert ckpt.clean_orphans(str(tmp_path)) == 0
+    assert ckpt.clean_orphans(str(tmp_path / "nope")) == 0
+
+
+def test_retention_prunes_oldest_first(tmp_path):
+    cfg, state = _tiny_state()
+    ck = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(state["params"], step=s, block=True)
+    live = sorted(int(f.stem.split("_")[1])
+                  for f in tmp_path.glob("step_*.json"))
+    assert live == [3, 4]                  # newest keep=2 survive
+    for s in (3, 4):
+        restored, side = ckpt.restore(
+            ckpt.step_path(str(tmp_path), s), state["params"])
+        assert side["step"] == s

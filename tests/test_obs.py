@@ -250,6 +250,91 @@ def test_summarize_fractions_partition_unity():
 
 
 # --------------------------------------------------------------------------- #
+# the grace bucket carries real modeled time (recovery-plane satellite)
+# --------------------------------------------------------------------------- #
+def test_grace_bucket_accounts_modeled_export_time():
+    """A soft preemption with exportable executing KV spends the summed
+    modeled export time in the ``grace`` state: the lane records a true
+    ``preempt.grace`` span, the grace bucket equals the span's duration,
+    and the six-bucket identity still partitions every lane's clock."""
+    from repro.core.events import EventLoop
+    from repro.core.perfmodel import ModelPerf
+    from repro.core.requests import Request
+    from repro.core.rollout_manager import RolloutManager
+    from repro.core.weight_transfer import TransferAgent, WeightStore
+    from repro.obs.tracer import Tracer
+
+    cfg_m = get_config("qwen3-8b")               # real KV bytes to export
+    loop = EventLoop()
+    store = WeightStore([TransferAgent(0, 400.0)], weight_bytes=8e9,
+                        sim_chunks=4)
+    mgr = RolloutManager(loop, model_perf_from_cfg(cfg_m), store,
+                         cfg=cfg_m, migration="kv",
+                         tracer=Tracer(lambda: loop.now))
+    i0 = mgr.allocate()
+    reqs = [Request(id=i, group=i // 2, prompt_len=512, max_total=1024,
+                    target_total=800, seed=0) for i in range(4)]
+    mgr.submit(reqs)
+    fired = []
+
+    def strike(r):
+        if not fired and r.n_generated >= 4:
+            fired.append(True)
+            loop.schedule(0.0, lambda: mgr.preempt(i0, grace_s=float("inf")))
+    mgr.on_token_cb = strike
+    loop.run(until=600.0)
+    assert fired
+    spans = [s for s in mgr.tracer.spans() if s.name == "preempt.grace"]
+    assert len(spans) == 1 and spans[0].closed
+    dur = spans[0].t1 - spans[0].t0
+    assert dur > 0.0                             # a TRUE span, not instant
+    report = check_accounting(mgr, tracer=mgr.tracer, now=loop.now)
+    assert report["grace_s"] == pytest.approx(dur)
+    # the dying lane billed its grace window to spot cost
+    assert mgr.spot_seconds >= dur
+    # the killed instance left the fleet only after the window elapsed
+    assert i0.id not in mgr.instances
+    mgr.allocate()
+    loop.run(until=6000.0)
+    assert all(r.done for r in reqs)
+
+
+def test_hard_kill_grace_is_instant():
+    """grace_s=0 (hard kill): nothing exportable, the lane dies at the
+    notice instant and the grace bucket stays zero."""
+    from repro.core.events import EventLoop
+    from repro.core.requests import Request
+    from repro.core.rollout_manager import RolloutManager
+    from repro.core.weight_transfer import TransferAgent, WeightStore
+    from repro.core.perfmodel import ModelPerf
+    from repro.obs.tracer import Tracer
+
+    loop = EventLoop()
+    store = WeightStore([TransferAgent(0, 400.0)], weight_bytes=8e9,
+                        sim_chunks=4)
+    mgr = RolloutManager(loop, ModelPerf(n_params=1e9, n_active=1e9), store,
+                         tracer=Tracer(lambda: loop.now))
+    i0 = mgr.allocate()
+    reqs = [Request(id=i, group=i, prompt_len=16, max_total=64,
+                    target_total=48, seed=0) for i in range(3)]
+    mgr.submit(reqs)
+    fired = []
+
+    def strike(r):
+        if not fired and r.n_generated >= 3:
+            fired.append(True)
+            loop.schedule(0.0, lambda: mgr.preempt(i0, grace_s=0.0))
+    mgr.on_token_cb = strike
+    loop.run(until=300.0)
+    assert fired
+    assert i0.id not in mgr.instances            # died at the notice
+    assert not any(s.name == "preempt.grace" and s.t1 > s.t0
+                   for s in mgr.tracer.spans())
+    report = check_accounting(mgr, tracer=mgr.tracer, now=loop.now)
+    assert report["grace_s"] == 0.0
+
+
+# --------------------------------------------------------------------------- #
 # perfetto export
 # --------------------------------------------------------------------------- #
 def test_perfetto_export_one_lane_per_instance(tmp_path):

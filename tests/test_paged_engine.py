@@ -224,6 +224,92 @@ def test_admission_errors():
         eng2.add_request(3, prompt, request_key(0, 3), 64, len(prompt))
 
 
+def test_allocator_grow_capped():
+    a = PagedKVAllocator(num_pages=3, page_size=4, max_pages=5)
+    a.alloc(2)
+    assert a.grow(6) == 5                      # clamped to the cap
+    with pytest.raises(OutOfPages):            # at the cap: no more growth
+        a.grow(10)
+    a.alloc(2)                                 # clamped growth still usable
+
+
+def test_pool_cap_backpressure_and_recovery():
+    """max_pool_pages: growth past the cap surfaces AdmissionError (not
+    unbounded doubling), and admission recovers once completions free
+    pages — the backpressure contract of the recovery-plane satellite."""
+    cfg, params, mk = _mk(max_batch=4, slab_len=8, page_size=4,
+                          temperature=0.0, max_pool_pages=12)
+    eng = mk()
+    assert eng.alloc.max_pages == 12
+    prompt = tok.encode("12+34=")              # 7 tokens -> 2 pages
+    # fill the capped pool: long-running requests hold their pages
+    held = []
+    rid = 0
+    while True:
+        try:
+            eng.add_request(rid, prompt, request_key(0, rid),
+                            len(prompt) + 24, len(prompt))
+            held.append(rid)
+            rid += 1
+        except AdmissionError:
+            break
+    assert held, "cap admitted nothing"
+    assert eng.alloc.num_pages <= 12           # never grew past the cap
+    # drive the admitted requests to completion -> pages free
+    done = set()
+    while len(done) < len(held):
+        for e in eng.step():
+            if e.finished:
+                done.add(e.req_id)
+    # admission recovers: the previously rejected request now fits
+    eng.add_request(99, prompt, request_key(0, 99),
+                    len(prompt) + 8, len(prompt))
+    out = []
+    while True:
+        evs = [e for e in eng.step() if e.req_id == 99]
+        out.extend(evs)
+        if any(e.finished for e in evs):
+            break
+    assert out, "recovered request never decoded"
+
+
+def test_instance_backpressure_requeues_pending(monkeypatch):
+    """A capped engine rejecting admission leaves requests PENDING on the
+    instance (no crash, no loss); they admit after completions."""
+    from repro.core.events import EventLoop
+    from repro.core.instance import RolloutInstance
+    from repro.core.load_balancer import LoadBalancer
+    from repro.core.perfmodel import SPOT_INSTANCE, ModelPerf
+    from repro.core.requests import Request, Status
+
+    cfg, params, mk = _mk(max_batch=8, slab_len=8, page_size=4,
+                          temperature=0.0, max_pool_pages=14)
+    eng = mk()
+
+    class _Mgr:
+        required_version = 0
+        lb = LoadBalancer()
+        def on_token(self, r, inst): pass
+        def on_complete(self, r, inst): r.status = Status.DONE
+
+    loop = EventLoop()
+    inst = RolloutInstance(0, loop, SPOT_INSTANCE,
+                           ModelPerf(n_params=1e9, n_active=1e9), _Mgr(),
+                           max_exec=8, engine=eng)
+    inst.weight_version = 0
+    prompt = tok.encode("12+34=")
+    reqs = [Request(id=i, group=i, prompt_len=len(prompt),
+                    max_total=len(prompt) + 16, prompt_ids=list(prompt))
+            for i in range(8)]
+    inst.assign_many(reqs)
+    # the capped pool cannot hold all 8 at once: some stay pending
+    assert inst.pending, "cap never backpressured"
+    assert len(inst.executing) + len(inst.pending) == 8
+    loop.run()
+    # ...but every request completes once earlier ones free pages
+    assert all(r.done for r in reqs)
+
+
 def test_response_longer_than_slab():
     """The old dense engine asserted L < slab_len; under paging a request
     may exceed slab_len * anything — the pool allocates/grows on demand."""

@@ -1,0 +1,337 @@
+"""Recovery plane: crash-consistent whole-run checkpoint/resume.
+
+The contract under test (the PR's acceptance bar): a hybrid run killed at
+ANY step boundary by a reserved-cluster fault and resumed from its last
+RunCheckpoint — same seed, same replayed FaultPlan — completes with a
+completed-response set bit-identical to the uninterrupted run's, and
+training consumption stays exactly-once across the crash.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.recovery import RecoveryStore, RunJournal
+from repro.core.faults import (ChaosInvariantError, FaultPlan, TrainerCrash,
+                               check_invariants)
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import ModelPerf
+from repro.core.requests import Request
+from repro.core.spot_trace import TraceEvent
+
+PERF = ModelPerf(n_params=7e9, n_active=7e9)
+TRACE = [TraceEvent(0.0, +4), TraceEvent(300.0, -1), TraceEvent(600.0, +2)]
+
+
+def _mkcfg(seed, ckpt_dir=None, crash_at=(), **kw):
+    fp = FaultPlan(seed=seed, corrupt_p=0.02, prune_p=0.01, stall_p=0.02,
+                   stall_s=2.0, hard_kill_fraction=0.5, grace_s=2.0,
+                   trainer_crash_at=tuple(crash_at),
+                   trainer_stall_windows=((100.0, 50.0, 1.5),))
+    return RunnerConfig(mode="rlboost", n_prompts=8, group_size=4,
+                        mean_response=800, max_response=2048, m_b=8,
+                        seed=seed, fault_plan=fp, ckpt_dir=ckpt_dir, **kw)
+
+
+def _runner(cfg):
+    r = HybridRunner(cfg, PERF)
+    r.load_trace(TRACE)
+    return r
+
+
+# --------------------------------------------------------------------------- #
+# RunJournal: ledger semantics + chunk-plane serialization
+# --------------------------------------------------------------------------- #
+def _req(rid, group=0, n_gen=5):
+    r = Request(id=rid, group=group, prompt_len=16, max_total=64, seed=0)
+    r.tokens = list(range(n_gen))
+    r.n_generated = n_gen
+    return r
+
+
+def test_journal_roundtrip_and_exactly_once():
+    j = RunJournal()
+    reqs = [_req(i, group=i // 2) for i in range(4)]
+    for i, r in enumerate(reqs):
+        j.record_complete(r, step=i // 2)
+    j.record_trained(reqs[:3])
+    # leaves -> journal round trip preserves the comparand exactly
+    j2 = RunJournal.from_leaves(j.payload_leaves())
+    assert j2.response_set() == j.response_set()
+    assert j2.trained == j.trained
+    # request 3 completed but never consumed
+    probs = j2.exactly_once_problems()
+    assert len(probs) == 1 and "never consumed" in probs[0]
+    # double consumption and ghost consumption are both caught
+    j2.record_trained(reqs)                     # 0..2 now trained twice
+    j2.record_trained([_req(99)])               # never completed
+    probs = j2.exactly_once_problems()
+    assert any("more than once" in p for p in probs)
+    assert any("never completed" in p for p in probs)
+
+
+def test_journal_leaves_are_append_only():
+    """Step i's leaf bytes never change once step i is behind a boundary —
+    the property that keeps chunk content addresses stable (incremental
+    checkpoints re-write only the new step's chunks)."""
+    j = RunJournal()
+    for r in [_req(0), _req(1)]:
+        j.record_complete(r, step=0)
+    j.record_trained([_req(0), _req(1)])
+    leaf0 = j.payload_leaves()["journal:step:00000000"].tobytes()
+    for r in [_req(2, group=1), _req(3, group=1)]:
+        j.record_complete(r, step=1)
+    j.record_trained([_req(2, group=1)])
+    leaves = j.payload_leaves()
+    assert leaves["journal:step:00000000"].tobytes() == leaf0
+    assert "journal:step:00000001" in leaves
+
+
+# --------------------------------------------------------------------------- #
+# RecoveryStore: content-addressed directory semantics
+# --------------------------------------------------------------------------- #
+def _payload(step):
+    """Journal-shaped payload: earlier steps' leaves repeat verbatim."""
+    out = {}
+    for s in range(step + 1):
+        rng = np.random.RandomState(s)
+        out[f"journal:step:{s:08d}"] = rng.randint(
+            0, 255, size=3000, dtype=np.uint8)
+    return out
+
+
+def test_store_roundtrip(tmp_path):
+    store = RecoveryStore(str(tmp_path), chunk_bytes=1 << 10)
+    state = dict(t=12.5, step_idx=1, rng={"key": [1, 2, 3]})
+    stats = store.save(1, state, _payload(0))
+    assert stats["n_chunks_written"] == stats["n_chunks"] > 0
+    ck = store.load()
+    assert ck.step == 1 and ck.t == 12.5
+    assert ck.run_state["rng"] == {"key": [1, 2, 3]}
+    np.testing.assert_array_equal(ck.payload["journal:step:00000000"],
+                                  _payload(0)["journal:step:00000000"])
+
+
+def test_store_incremental_dedup(tmp_path):
+    """Unchanged prefix chunks keep their content address: a later
+    checkpoint re-writes only the new step's bytes."""
+    store = RecoveryStore(str(tmp_path), chunk_bytes=1 << 10)
+    s1 = store.save(1, dict(t=1.0), _payload(0))
+    s2 = store.save(2, dict(t=2.0), _payload(1))
+    assert s2["n_chunks_reused"] > 0
+    assert s2["bytes_written"] < s2["n_chunks"] * (1 << 10)
+    # both checkpoints remain loadable (shared chunks, two manifests)
+    assert store.load(1).step == 1
+    assert store.load(2).step == 2
+    assert s1["n_chunks_reused"] == 0
+
+
+def test_store_torn_write_falls_back(tmp_path):
+    store = RecoveryStore(str(tmp_path), chunk_bytes=1 << 10)
+    store.save(1, dict(t=1.0), _payload(0))
+    store.faults = FaultPlan(torn_ckpt_p=1.0)    # every draw tears
+    stats = store.save(2, dict(t=2.0), _payload(1))
+    assert stats["torn"]
+    ck = store.load()                            # newest is torn -> prior
+    assert ck.step == 1
+    assert store.n_fallbacks == 1
+
+
+def test_store_gc_keeps_newest(tmp_path):
+    store = RecoveryStore(str(tmp_path), chunk_bytes=1 << 10, keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, dict(t=float(s)), _payload(s - 1))
+    assert store.steps() == [3, 4]
+    # every surviving chunk is referenced by a surviving manifest
+    referenced = set()
+    for s in (3, 4):
+        meta = json.loads(store.step_path(s).read_text())
+        referenced.update(d for d, _, _ in meta["manifest"]["chunks"])
+    on_disk = {f.name for f in (tmp_path / "chunks").iterdir()}
+    assert on_disk == referenced
+    assert store.load().step == 4
+
+
+def test_store_orphans_and_empty_dir(tmp_path):
+    (tmp_path / "chunks").mkdir()
+    (tmp_path / "run_00000001.json.tmp123").write_text("{")
+    (tmp_path / "chunks" / "deadbeef.tmp123").write_bytes(b"x")
+    store = RecoveryStore(str(tmp_path))
+    assert not list(tmp_path.glob("**/*.tmp*"))
+    with pytest.raises(FileNotFoundError):
+        store.load()
+
+
+# --------------------------------------------------------------------------- #
+# the acceptance bar: kill at a step boundary, resume, bit-identical
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_crash_resume_bit_identical_sweep(seed, tmp_path):
+    """5-seed chaos sweep with trainer faults enabled: trainer crash mid-
+    run, resume from the last RunCheckpoint, completed-response set is
+    bit-identical to the uninterrupted run and training consumption is
+    exactly-once across the crash."""
+    r0 = _runner(_mkcfg(seed))                   # uninterrupted reference
+    r0.run(n_steps=4)
+    ref = r0.journal.response_set()
+    assert ref
+
+    # the same run, checkpointing every boundary, killed inside step 3
+    crash_t = r0.metrics[1]["step.t_end"] + 5.0
+    d = str(tmp_path)
+    r1 = _runner(_mkcfg(seed, ckpt_dir=d, crash_at=(crash_t,)))
+    with pytest.raises(TrainerCrash):
+        r1.run(n_steps=4)
+    assert r1.manager.fault_stats.n_trainer_crashes == 1
+
+    # resume: same seed, same replayed FaultPlan
+    r2 = HybridRunner.resume(_mkcfg(seed, ckpt_dir=d, crash_at=(crash_t,)),
+                             PERF)
+    assert r2.step_idx >= 1                      # a boundary was captured
+    r2.load_trace(TRACE)
+    r2.run(n_steps=4)
+    assert r2.journal.response_set() == ref      # bit-identical
+    summary = check_invariants(r2.manager, [], journal=r2.journal)
+    assert summary["n_journal_completed"] == len(ref)
+    assert summary["n_journal_trained"] == len(ref)
+    assert r2.registry.counters["recovery.n_resumes"] == 1
+
+
+def test_double_crash_double_resume(tmp_path):
+    """The crash-consume contract chains: each resume consumes exactly the
+    crash that killed its predecessor, so a run surviving two trainer
+    crashes still converges to the uninterrupted response set."""
+    r0 = _runner(_mkcfg(7))
+    r0.run(n_steps=4)
+    ref = r0.journal.response_set()
+
+    d = str(tmp_path)
+    crashes = (r0.metrics[0]["step.t_end"] + 5.0,
+               r0.metrics[2]["step.t_end"] + 5.0)
+    r1 = _runner(_mkcfg(7, ckpt_dir=d, crash_at=crashes))
+    with pytest.raises(TrainerCrash):
+        r1.run(n_steps=4)
+    r2 = HybridRunner.resume(_mkcfg(7, ckpt_dir=d, crash_at=crashes), PERF)
+    r2.load_trace(TRACE)
+    with pytest.raises(TrainerCrash):
+        r2.run(n_steps=4)
+    r3 = HybridRunner.resume(_mkcfg(7, ckpt_dir=d, crash_at=crashes), PERF)
+    r3.load_trace(TRACE)
+    r3.run(n_steps=4)
+    assert r3.journal.response_set() == ref
+    check_invariants(r3.manager, [], journal=r3.journal)
+
+
+def test_resume_falls_back_past_torn_newest(tmp_path):
+    """Degradation ladder, checkpoint rung: when the newest checkpoint's
+    fresh chunk is torn, resume lands on the prior boundary and the run
+    STILL finishes bit-identical (just more re-execution)."""
+    r0 = _runner(_mkcfg(11))
+    r0.run(n_steps=4)
+    ref = r0.journal.response_set()
+
+    d = str(tmp_path)
+    crash_t = r0.metrics[2]["step.t_end"] + 5.0
+    r1 = _runner(_mkcfg(11, ckpt_dir=d, crash_at=(crash_t,)))
+    with pytest.raises(TrainerCrash):
+        r1.run(n_steps=4)
+
+    # tear a chunk only the NEWEST manifest references (its fresh leaf)
+    store = RecoveryStore(d)
+    steps = store.steps()
+    assert len(steps) >= 2
+    refs = {}
+    for s in steps:
+        meta = json.loads(store.step_path(s).read_text())
+        refs[s] = {dd for dd, _, _ in meta["manifest"]["chunks"]}
+    only_newest = refs[steps[-1]] - set().union(*(refs[s]
+                                                 for s in steps[:-1]))
+    assert only_newest, "newest checkpoint wrote no fresh chunk"
+    victim = store.dir / "chunks" / sorted(only_newest)[0]
+    victim.write_bytes(victim.read_bytes()[:10])
+
+    cfg = _mkcfg(11, ckpt_dir=d, crash_at=(crash_t,))
+    r2 = HybridRunner.resume(cfg, PERF)
+    assert r2.step_idx == steps[-2]              # fell back one boundary
+    assert r2.registry.counters["faults.n_ckpt_fallbacks"] >= 1
+    r2.load_trace(TRACE)
+    r2.run(n_steps=4)
+    assert r2.journal.response_set() == ref
+    check_invariants(r2.manager, [], journal=r2.journal)
+
+
+def test_resume_without_checkpoint_raises(tmp_path):
+    cfg = _mkcfg(0, ckpt_dir=str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        HybridRunner.resume(cfg, PERF)
+
+
+def test_checkpoint_counters_and_overhead(tmp_path):
+    """ckpt.* registry counters surface in step metrics, and the modeled
+    blocking D2H overhead charges the event clock."""
+    # small chunks so the step-1 journal spans several: the step-2 save
+    # then reuses the stable prefix (incremental property end-to-end)
+    cfg = _mkcfg(1, ckpt_dir=str(tmp_path), chunk_bytes=1 << 10,
+                 trace=True)
+    r = _runner(cfg)
+    metrics = r.run(n_steps=3)
+    last = metrics[-1]
+    assert last["ckpt.n_saves"] == 2             # boundaries 1 and 2
+    assert last["ckpt.n_chunks_written"] > 0
+    assert last["ckpt.overhead_s"] > 0.0
+    # incremental property end-to-end: later saves reuse earlier chunks
+    assert last["ckpt.n_chunks_reused"] > 0
+    spans = [s for s in r.tracer.spans() if s.name == "ckpt.write"]
+    assert len(spans) == 2 and all(s.t1 > s.t0 for s in spans)
+
+
+def test_real_backend_crash_resume_bit_identical(tmp_path):
+    """Real compute: the RunCheckpoint's trainer payload (params +
+    optimizer + pending grad accumulator) restores through the harness,
+    so a crashed-and-resumed run reproduces the uninterrupted run's
+    responses bit-identically AND its final params exactly."""
+    import jax
+    from repro.rl.harness import RealRLHarness, tiny_math_config
+
+    def mkrc(ckpt_dir=None, crash_at=()):
+        fp = FaultPlan(seed=0, trainer_crash_at=tuple(crash_at))
+        return RunnerConfig(mode="rlboost", n_prompts=2, group_size=2,
+                            m_b=2, seed=0, t_seed_init=5.0,
+                            fault_plan=fp, ckpt_dir=ckpt_dir)
+
+    cfg = tiny_math_config()
+    trace = [TraceEvent(0.0, +2)]
+    h0 = RealRLHarness(cfg, mkrc(), max_new=6)
+    h0.runner.load_trace(trace)
+    m0, _ = h0.run(3)
+    ref = h0.runner.journal.response_set()
+    assert ref
+
+    d = str(tmp_path)
+    crash_t = m0[1]["step.t_end"] + 3.0          # inside step 3
+    h1 = RealRLHarness(cfg, mkrc(d, (crash_t,)), max_new=6)
+    h1.runner.load_trace(trace)
+    with pytest.raises(TrainerCrash):
+        h1.run(3)
+
+    h2 = RealRLHarness(cfg, mkrc(d, (crash_t,)), max_new=6, resume=True)
+    assert h2.runner.step_idx >= 1
+    h2.runner.load_trace(trace)
+    h2.run(3)
+    assert h2.runner.journal.response_set() == ref
+    check_invariants(h2.runner.manager, [], journal=h2.runner.journal)
+    for a, b in zip(jax.tree.leaves(h0.params), jax.tree.leaves(h2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(h0.opt), jax.tree.leaves(h2.opt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_journal_ghost_training_fails_invariants():
+    """check_invariants' journal extension: a consumption with no
+    completion (ghost) trips the exactly-once gate."""
+    r = _runner(_mkcfg(2))
+    r.run(n_steps=2)
+    r.journal.trained[10**6] = 1                 # ghost consumption
+    with pytest.raises(ChaosInvariantError, match="never completed"):
+        check_invariants(r.manager, [], journal=r.journal)
