@@ -23,6 +23,7 @@ bench-smoke:
 	$(PY) -m benchmarks.run --quick --only engine_horizon
 	$(PY) -m benchmarks.run --quick --only migration
 	$(PY) -m benchmarks.run --quick --only integrity
+	$(PY) -m benchmarks.run --quick --only streaming
 	$(PY) -m benchmarks.run --quick --only fault
 	$(PY) -m benchmarks.run --quick --only recovery
 	$(PY) -m benchmarks.run --quick --only obs

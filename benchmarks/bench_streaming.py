@@ -1,0 +1,77 @@
+"""Streamed token-level collection (paper technique 3) vs batch collection
+on the fig16-style real tiny-model hybrid run.
+
+Same seed, same trace, same model: the ONLY difference is the collection
+policy, so the completed-response sets are identical and the headline
+numbers isolate the overlap win —
+
+  * ``overlap_fraction``  — share of trainer work the streamed collector
+    ran while slow rollout tails were still decoding (0 for batch, by
+    construction);
+  * ``step_time_ratio``   — streamed / batch mean step time (< 1.0: the
+    tail-flush credit comes straight off the step's critical path).
+
+Both land in streaming.json where ``check_regression.py`` gates them.
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro import obs
+from repro.core import spot_trace as tr
+from repro.core.hybrid_runtime import RunnerConfig
+from repro.obs.accounting import check_accounting
+from repro.rl.harness import RealRLHarness, tiny_math_config
+
+OUT = Path("experiments/bench")
+
+
+def run(collection: str, n_steps: int, seed=11):
+    cfg = tiny_math_config()
+    rc = RunnerConfig(mode="rlboost", n_prompts=8, group_size=4, m_b=8,
+                      t_seed_init=4.0, seed=seed, collection=collection,
+                      trace=True)
+    h = RealRLHarness(cfg, rc, max_new=10, lr=1e-3)
+    h.runner.load_trace(tr.step_trace([(0.0, 4), (40.0, -1), (55.0, +1)]))
+    metrics, rewards = h.run(n_steps)
+    check_accounting(h.runner.manager, tracer=h.runner.tracer,
+                     now=h.runner.loop.now)
+    return metrics, rewards, h
+
+
+def main(quick: bool = False):
+    OUT.mkdir(parents=True, exist_ok=True)
+    n_steps = 3 if quick else 8
+    m_b, r_b, h_b = run("batch", n_steps)
+    m_s, r_s, h_s = run("streamed", n_steps)
+    assert (h_s.runner.journal.response_set()
+            == h_b.runner.journal.response_set()), \
+        "collection policy changed WHAT was collected"
+
+    t_batch = float(np.mean([m["step.time_s"] for m in m_b]))
+    t_streamed = float(np.mean([m["step.time_s"] for m in m_s]))
+    ratio = t_streamed / t_batch
+    summ = obs.summarize(m_s)
+    overlap_fraction = summ.get("trainer_overlap_fraction", 0.0)
+    n_flushes = len([s for s in h_s.runner.tracer.spans()
+                     if s.name == "collect.flush"])
+    out = dict(step_time_batch_s=t_batch, step_time_streamed_s=t_streamed,
+               step_time_ratio=ratio, overlap_fraction=overlap_fraction,
+               overlap_s=summ.get("trainer_overlap_s", 0.0),
+               n_stream_tokens=h_s.runner.collector.n_stream_tokens,
+               n_tail_flushes=n_flushes,
+               final_reward_batch=r_b[-1], final_reward_streamed=r_s[-1])
+    (OUT / "streaming.json").write_text(json.dumps(out, indent=2))
+    from benchmarks.common import emit
+    emit("streaming/step_time_ratio", ratio)
+    emit("streaming/overlap_fraction", overlap_fraction)
+    emit("streaming/overlap_s", out["overlap_s"])
+    emit("streaming/n_tail_flushes", n_flushes)
+    assert overlap_fraction > 0.0, "streamed collection overlapped nothing"
+    assert ratio < 1.0, "streamed collection did not shorten the step"
+
+
+if __name__ == "__main__":
+    main()

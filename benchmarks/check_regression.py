@@ -84,6 +84,18 @@ METRICS = [
     ("integrity.json", "fig16_rollout_pull_stall_fraction",
      lambda d: d["pull_stall_fraction"],
      dict(rel=0.30, atol=0.05, direction="worse_above")),
+    # streamed collection (PR 9): both run on the modeled event clock of
+    # the fig16-style real tiny-model run — deterministic given the seed.
+    # The step-time ratio drifting up toward 1.0 means the tail-flush
+    # credit stopped landing on the critical path; the overlap fraction
+    # collapsing means rows stopped being preprocessed as they finish
+    # (the token event stream or the on_row_ready hook broke).
+    ("streaming.json", "streaming_step_time_ratio",
+     lambda d: d["step_time_ratio"],
+     dict(rel=0.0, atol=0.05, direction="worse_above")),
+    ("streaming.json", "streaming_overlap_fraction",
+     lambda d: d["overlap_fraction"],
+     dict(rel=0.50, atol=0.02, direction="worse_below")),
     ("migration.json", "kv_migration_speedup_at_4k",
      lambda d: d["speedup_at_4k_none"], dict(direction="worse_below")),
     ("migration.json", "kv_migration_stall_none_p4096",

@@ -16,8 +16,8 @@ from benchmarks import (bench_engine, bench_fault_handling, bench_integrity,
                         bench_kernels, bench_migration, bench_motivation,
                         bench_obs, bench_recovery, bench_response_length,
                         bench_seeding_ablation, bench_static_instances,
-                        bench_trace_throughput, bench_transfer,
-                        bench_weight_transfer, roofline)
+                        bench_streaming, bench_trace_throughput,
+                        bench_transfer, bench_weight_transfer, roofline)
 
 BENCHES = [
     ("fig2_motivation", bench_motivation.main),
@@ -32,6 +32,7 @@ BENCHES = [
     ("fig15_fault_handling", bench_fault_handling.main),
     ("recovery_plane", bench_recovery.main),
     ("fig16_integrity", bench_integrity.main),
+    ("streaming_collection", bench_streaming.main),
     ("obs_flight_recorder", bench_obs.main),
     ("kernels", bench_kernels.main),
     ("roofline", roofline.main),

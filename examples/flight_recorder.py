@@ -3,7 +3,8 @@ stall-accounting identity, and export a Perfetto trace.
 
   PYTHONPATH=src python examples/flight_recorder.py [--steps 2]
 
-Open the written ``rlboost_flight.trace.json`` at https://ui.perfetto.dev
+Open the written ``experiments/bench/rlboost_flight.trace.json`` at
+https://ui.perfetto.dev
 (or chrome://tracing): one lane per rollout instance (``inst:N``) showing
 prefill/decode blocks, weight-pull and KV-migration spans, preemption
 grace notices and deaths; ``nic:*`` lanes show per-agent chunk fetches;
@@ -23,7 +24,7 @@ from repro.core.faults import FaultPlan
 from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
 from repro.core.perfmodel import model_perf_from_cfg
 
-OUT = Path("rlboost_flight.trace.json")
+OUT = Path("experiments/bench/rlboost_flight.trace.json")
 
 
 def main():
@@ -55,6 +56,7 @@ def main():
     print(json.dumps({k: round(v, 4) if isinstance(v, float) else v
                       for k, v in summ.items()}, indent=2))
 
+    OUT.parent.mkdir(parents=True, exist_ok=True)
     obs.export_chrome_trace(runner.tracer, OUT)
     print(f"\nwrote {OUT} — open it at https://ui.perfetto.dev "
           "(Trace > Open trace file)")

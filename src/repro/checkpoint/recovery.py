@@ -150,7 +150,12 @@ class RunJournal:
         return problems
 
     # ---------------- chunk-plane serialization ---------------- #
-    def payload_leaves(self) -> "OrderedDict[str, np.ndarray]":
+    # converged checkpointable-component protocol: the journal exposes the
+    # same state_dict()/load_state_dict() pair as SeedingScheduler and the
+    # CollectionPolicy — its state dict just happens to be leaf-shaped
+    # (``journal:step:*`` uint8 arrays) because it rides the chunk payload
+    # rather than the JSON run_state.
+    def state_dict(self) -> "OrderedDict[str, np.ndarray]":
         """Append-only per-step leaves: step i's record bytes never change
         once step i is behind a boundary, so the concatenated stream has
         a stable prefix and unchanged chunks keep their content address
@@ -170,15 +175,22 @@ class RunJournal:
                 blob, dtype=np.uint8).copy()
         return out
 
-    @classmethod
-    def from_leaves(cls, flat: Dict[str, np.ndarray]) -> "RunJournal":
-        j = cls()
+    def load_state_dict(self, flat: Dict[str, np.ndarray]):
+        """Rebuild from ``journal:step:*`` leaves (other keys — e.g. the
+        checkpoint's ``trainer:*`` payload — are ignored)."""
+        self.completed.clear()
+        self.trained.clear()
         for key in sorted(k for k in flat if k.startswith("journal:step:")):
             blob = json.loads(bytes(flat[key].tobytes()).decode())
             for rec in blob["completed"]:
-                j.completed[rec["id"]] = rec
+                self.completed[rec["id"]] = rec
             for rid, n in blob["trained"].items():
-                j.trained[int(rid)] = int(n)
+                self.trained[int(rid)] = int(n)
+
+    @classmethod
+    def from_leaves(cls, flat: Dict[str, np.ndarray]) -> "RunJournal":
+        j = cls()
+        j.load_state_dict(flat)
         return j
 
 

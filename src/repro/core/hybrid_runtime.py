@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.events import EventLoop
 from repro.core.load_balancer import LoadBalancer
-from repro.core.microbatch import MicrobatchCollector
+from repro.core.microbatch import make_collection_policy
 from repro.core.perfmodel import (RESERVED_NODE, SPOT_INSTANCE, InstanceKind,
                                   ModelPerf)
 from repro.core.requests import Request
@@ -53,6 +53,12 @@ class RunnerConfig:
     local_max_exec: int = 128
     remote_max_exec: int = 64
     m_b: int = 32                          # min microbatch (samples)
+    # collection policy (core.microbatch): "batch" = whole-response
+    # collection (bit-identical legacy behavior); "streamed" = token-level
+    # collection — the trainer-side collector consumes the engines' token
+    # event stream, starts per-row work as rows finish, and the step tail
+    # is charged only un-overlapped grad work (rollout.overlap_s).
+    collection: str = "batch"
     theta: int = 8
     eta: float = 4.0
     t_seed_init: float = 20.0
@@ -168,10 +174,19 @@ class HybridRunner:
             n_resv=cfg.n_local_engines * cfg.n_reserved_nodes,
             eta=cfg.eta, t_init=cfg.t_seed_init,
             enabled=(cfg.mode == "rlboost"))
-        self.collector = MicrobatchCollector(
-            group_size=cfg.group_size, min_microbatch=cfg.m_b)
+        self.collector = make_collection_policy(
+            cfg.collection, group_size=cfg.group_size,
+            min_microbatch=cfg.m_b,
+            preprocess_fraction=perf.train_preprocess_fraction)
         self.manager.on_complete_cb = self._on_complete
         self.collector.on_ready = self._try_train
+        if self.collector.wants_tokens:
+            # streamed collection: plumb the engines' per-token event
+            # stream (instance._emit / the sim's fused-horizon loop ->
+            # manager.on_token) into the trainer-side collector.  Batch
+            # collection leaves the callback unset so the per-token hot
+            # path stays free of callback overhead.
+            self.manager.on_token_cb = self.collector.on_token
 
         self.capacity = 0                   # trace-provided availability
         self.rng = np.random.RandomState(cfg.seed + 17)
@@ -186,6 +201,7 @@ class HybridRunner:
         self._idle_since = 0.0
         self._t_train = 0.0
         self._t_train_wait = 0.0
+        self._t_overlap = 0.0
         self._trained = 0
         self._total = 0
         self._step_requests: List[Request] = []
@@ -280,6 +296,7 @@ class HybridRunner:
         self._rollout_done = False
         self._t_train = 0.0
         self._t_train_wait = 0.0
+        self._t_overlap = 0.0
         self._trained = 0
         self._step_started = self.loop.now
         self._n_series = [(self.loop.now, self.manager.n_remote())]
@@ -365,15 +382,21 @@ class HybridRunner:
     # ------------------------------------------------------------------ #
     def _on_complete(self, r: Request):
         self.journal.record_complete(r, step=self.step_idx)
-        self.collector.add(r)
+        # rollout-done is decided BEFORE the collector sees the last row:
+        # its on_ready fires _try_train from inside add(), and that pop —
+        # the step's final backlog — must already count as a tail flush
+        # for the streamed policy to credit it (r.status is DONE here)
         if all(x.done for x in self._step_requests):
             self._rollout_done = True
+            self.collector.note_rollout_done()
             if self.cfg.mode == "colocated":
                 for inst in self._locals:
                     self.manager.release(inst)
                 self._locals = []
                 self._trainer_available_at = self.loop.now
                 self._idle_since = self.loop.now
+        self.collector.add(r)
+        if self._rollout_done:
             self._try_train()
 
     def _try_train(self):
@@ -387,6 +410,7 @@ class HybridRunner:
             if self._trained >= self._total:
                 self._finish_step()
             return
+        is_flush = self._rollout_done
         self._t_train_wait += max(self.loop.now - self._idle_since, 0.0)
         tokens = sum(r.total_len for r in mb)
         dt = self.perf.train_time(RESERVED_NODE, tokens,
@@ -394,6 +418,13 @@ class HybridRunner:
                                   internode_penalty=(
                                       1.15 if self.cfg.n_reserved_nodes > 1
                                       else 1.0))
+        # collection-policy overlap credit: per-row preprocess work the
+        # streamed collector already ran while slow tails decoded comes
+        # off the charged duration (batch collection credits nothing)
+        dt, credit = self.collector.charge(mb, dt, self.loop.now)
+        if credit > 0.0:
+            self.registry.inc("rollout.overlap_s", credit)
+            self._t_overlap += credit
         slow = 1.0
         if self.cfg.fault_plan is not None:
             # reserved-cluster straggler window: the modeled rl.step
@@ -403,10 +434,21 @@ class HybridRunner:
                 self.manager.fault_stats.n_trainer_stalled_mb += 1
         dt *= slow
         self._trainer_busy = True
+        if is_flush and self.collector.wants_tokens:
+            # collect.flush: the streaming collector's assembly window for
+            # the tail microbatch — first member's completion to the pop
+            t0 = min((r.completed_at for r in mb
+                      if r.completed_at is not None),
+                     default=self.loop.now)
+            self.tracer.end(
+                self.tracer.begin("collect.flush", "trainer",
+                                  parent=self._step_span,
+                                  t0=max(t0, self._step_started),
+                                  n_samples=len(mb), credit_s=credit))
         mb_span = self.tracer.begin("train.microbatch", "trainer",
                                     parent=self._step_span,
                                     n_samples=len(mb), tokens=tokens,
-                                    slowdown=slow)
+                                    slowdown=slow, credit_s=credit)
 
         def done(mb=mb, dt=dt):
             self._trainer_busy = False
@@ -464,14 +506,19 @@ class HybridRunner:
         reg.gauge("rollout.t_remote_wait_s", t_remote_wait)
         reg.gauge("train.t_train_s", self._t_train)
         reg.gauge("train.t_wait_s", self._t_train_wait)
+        reg.gauge("train.t_overlap_s", self._t_overlap)
         for k, v in aggregate_accounts(self.manager.accounts(),
                                        now).items():
             reg.set_counter(f"obs.{k}", v)
         self.tracer.end(self._step_span, tokens=tokens)
         self.metrics.append(reg.snapshot())
+        # the seeding controller balances on trainer WORK, which streaming
+        # only relocates (overlap credit included back in): its t_seed
+        # sequence is therefore independent of the collection policy
         self.scheduler.update(StepStats(
             t_train_wait=self._t_train_wait, t_remote_wait=t_remote_wait,
-            t_train=max(self._t_train, 1e-9), t_remote=t_remote,
+            t_train=max(self._t_train + self._t_overlap, 1e-9),
+            t_remote=t_remote,
             n_prem_avg=n_avg, n_prem_end=self.manager.n_remote()))
         self.step_idx += 1
         self._reconcile()                    # N_prem may have changed
@@ -488,9 +535,18 @@ class HybridRunner:
         # the caller's only move is HybridRunner.resume(cfg, perf).
         raise TrainerCrash(self.loop.now, self.step_idx)
 
+    @property
+    def _ckpt_components(self) -> Dict[str, object]:
+        """Checkpointable components under the converged protocol: each
+        entry exposes ``state_dict()`` / ``load_state_dict()``, and both
+        ``_run_state`` and ``restore`` iterate this registry instead of
+        naming components (the journal rides the chunk payload, not the
+        JSON run_state, so it is snapshotted in ``_save_checkpoint``)."""
+        return dict(scheduler=self.scheduler, collector=self.collector)
+
     def _run_state(self, trainer_meta: Dict) -> Dict:
         from repro.checkpoint.recovery import rng_state_to_json
-        return dict(
+        state = dict(
             step_idx=self.step_idx,
             t=self.loop.now,
             version=self.store.version,
@@ -501,9 +557,10 @@ class HybridRunner:
             next_mig_id=self.manager._next_mig_id,
             spot_seconds=self.manager.spot_seconds,
             rng=rng_state_to_json(self.rng),
-            scheduler=self.scheduler.state_dict(),
-            collector=self.collector.state_dict(),
             trainer_meta=trainer_meta)
+        for name, comp in self._ckpt_components.items():
+            state[name] = comp.state_dict()
+        return state
 
     def _save_checkpoint(self) -> float:
         """Write a RunCheckpoint at the current step boundary; returns the
@@ -513,7 +570,7 @@ class HybridRunner:
         trainer_tree, trainer_meta = (self.trainer_state_fn()
                                       if self.trainer_state_fn is not None
                                       else (None, {}))
-        payload = self.journal.payload_leaves()
+        payload = self.journal.state_dict()
         if trainer_tree is not None:
             for k, v in flatten_params(trainer_tree).items():
                 payload[f"trainer:{k}"] = v
@@ -548,8 +605,8 @@ class HybridRunner:
         self.manager._next_mig_id = int(rs["next_mig_id"])
         self.manager.spot_seconds = float(rs["spot_seconds"])
         rng_state_from_json(self.rng, rs["rng"])
-        self.scheduler.load_state(rs["scheduler"])
-        self.collector.load_state(rs["collector"])
+        for name, comp in self._ckpt_components.items():
+            comp.load_state_dict(rs[name])
         self.journal = RunJournal.from_leaves(ckpt.payload)
         trainer_flat = ckpt.trainer_flat()
         if self.trainer_restore_fn is not None and trainer_flat:

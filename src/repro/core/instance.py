@@ -482,16 +482,16 @@ class RolloutInstance:
                 from repro.rl.sampler import request_key
                 from repro.serving.engine import AdmissionError
                 try:
-                    if len(group) > 1:
-                        self.engine.add_group(
-                            [(x.id, request_key(x.seed, x.id), x.max_total)
-                             for x in group],
-                            list(r.prompt_ids or []), r.prompt_len)
-                    else:
-                        self.engine.add_request(
-                            r.id, r.context_ids(),
-                            request_key(r.seed, r.id), r.max_total,
-                            r.prompt_len)
+                    # ONE admission path (add_request is the size-1 alias
+                    # of add_group): a fresh GRPO group shares its prompt
+                    # prefill; a lone request's context may carry partial
+                    # tokens (migration continuation) — siblings are only
+                    # grouped when n_generated == 0, so context_ids() IS
+                    # the shared prompt in the group case
+                    self.engine.add_group(
+                        [(x.id, request_key(x.seed, x.id), x.max_total)
+                         for x in group],
+                        r.context_ids(), r.prompt_len)
                 except AdmissionError:
                     reg = getattr(self.manager, "registry", None)
                     if reg is not None:

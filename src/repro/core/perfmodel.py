@@ -57,6 +57,15 @@ class ModelPerf:
     # scale linearly with context, so the crossover is set by this
     # constant (see migration_stall_times / ROADMAP PR 4 notes).
     migration_overhead_s: float = 0.05
+    # fraction of train_time that is PER-ROW preprocessing (reward
+    # scoring, behavior-logprob staging, advantage prep) rather than the
+    # fwd+bwd grad pass over the assembled microbatch.  The streamed
+    # collection policy runs this share off the grad critical path as
+    # rows finish, so the sim's event clock charges the step tail only
+    # the remaining (1 - fraction) grad-side work — overlapped trainer
+    # seconds accounted under ``rollout.overlap_s``.  Batch collection
+    # ignores it (bit-identical legacy pacing).
+    train_preprocess_fraction: float = 0.35
 
     @property
     def weight_bytes(self) -> float:
@@ -200,6 +209,13 @@ class ModelPerf:
         t = 6.0 * self.n_params * n_tokens / (
             n_nodes * kind.flops * TRAIN_MFU)
         return t * internode_penalty
+
+    def train_overlap_split(self, t_train: float) -> Tuple[float, float]:
+        """(preprocess_s, grad_s) decomposition of a modeled train time —
+        the share streamed collection may overlap with rollout vs. the
+        grad pass that stays on the trainer's critical path."""
+        p = self.train_preprocess_fraction * t_train
+        return p, t_train - p
 
     def weight_transfer_time(self, sender_gbps: float, receiver_gbps: float,
                              concurrency: int = 1) -> float:

@@ -124,6 +124,10 @@ class RolloutManager:
         self.queued: List[Request] = []         # held centrally (Theta cap)
         self.required_version = 0
         self._next_instance_id = 0
+        # per-token event stream: fired on every generated token (sim and
+        # real backends).  Streamed collection (CollectionPolicy.on_token)
+        # subscribes here; left None under batch collection so the hot
+        # decode path pays nothing for the hook.
         self.on_token_cb: Optional[Callable[[Request], None]] = None
         self.on_complete_cb: Optional[Callable[[Request], None]] = None
         self.spot_seconds = 0.0                  # cost accounting

@@ -46,15 +46,16 @@ class SeedingScheduler:
         self.n_prem = float(self.n_resv)
 
     # ------------------------------------------------------------------ #
-    # recovery plane: the scheduler's feedback memory is part of the run
-    # checkpoint — resume must warm-start T_seed / N_prem exactly where
-    # the crashed timeline left them, or the two runs diverge in timing.
+    # recovery plane (converged checkpointable-component protocol): the
+    # scheduler's feedback memory is part of the run checkpoint — resume
+    # must warm-start T_seed / N_prem exactly where the crashed timeline
+    # left them, or the two runs diverge in timing.
     def state_dict(self) -> Dict:
         return dict(t_seed=self.t_seed, n_prem=self.n_prem,
                     memory={str(k): v for k, v in self.memory.items()},
                     last_n=self._last_n)
 
-    def load_state(self, state: Dict):
+    def load_state_dict(self, state: Dict):
         self.t_seed = float(state["t_seed"])
         self.n_prem = float(state["n_prem"])
         self.memory = {int(k): float(v)

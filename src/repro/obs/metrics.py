@@ -158,6 +158,14 @@ def summarize(metrics: List[Mapping]) -> Dict[str, float]:
                throughput=tokens / max(duration, 1e-9),
                t_train=sum(m.get("train.t_train_s", 0.0) for m in metrics),
                step_time_mean=duration / len(metrics))
+    # streamed collection: trainer work credited against the rollout tail.
+    # ``rollout.overlap_s`` is a cumulative counter (not a stall bucket —
+    # it lives on the trainer side of the ledger), so read the last value.
+    overlap = last.get("rollout.overlap_s", 0.0)
+    if overlap > 0:
+        out["trainer_overlap_s"] = overlap
+        out["trainer_overlap_fraction"] = overlap / max(
+            overlap + out["t_train"], 1e-9)
     elapsed = last.get("obs.elapsed_s", 0.0)
     if elapsed > 0:
         for b in ("busy_prefill", "busy_decode", "pull_stall",

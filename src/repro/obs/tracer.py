@@ -25,7 +25,9 @@ Span taxonomy (ROADMAP "Telemetry plane" notes):
     ``instance.dead``
   NIC lanes (``nic:AGENT``): ``transfer.chunk`` (parent = the owning
     pull's span)
-  trainer lane (``trainer``): ``rl.step``, ``train.microbatch``
+  trainer lane (``trainer``): ``rl.step``, ``train.microbatch``,
+    ``collect.flush`` (streamed collection: tail-flush window whose
+    preprocess share overlapped the rollout)
   engine lanes (real backend, wall clock): ``engine.prefill``,
     ``engine.decode``, ``engine.swap_weights``, ``engine.kv_export``,
     ``engine.kv_import``

@@ -22,10 +22,11 @@ carry logprobs; masks are expected to be 0 at position 0.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.transformer import forward, token_logprobs
 from repro.optim import adamw
@@ -41,6 +42,23 @@ def group_advantages(rewards: jnp.ndarray, group_size: int,
     mean = g.mean(axis=1, keepdims=True)
     std = g.std(axis=1, keepdims=True)
     return ((g - mean) / (std + eps)).reshape(-1)
+
+
+def group_normalized_advantages(rewards: np.ndarray,
+                                groups: Dict[int, List[int]],
+                                eps: float = 1e-4) -> np.ndarray:
+    """Host-side GRPO advantages for an explicitly-grouped microbatch.
+
+    ``groups`` maps group id -> row indices into ``rewards``.  Unlike
+    :func:`group_advantages` this does not assume contiguous layout — the
+    collection policy hands the trainer whole groups but their rows may be
+    interleaved within the microbatch.
+    """
+    adv = np.zeros_like(rewards, dtype=np.float32)
+    for idxs in groups.values():
+        rs = rewards[idxs]
+        adv[idxs] = (rs - rs.mean()) / (rs.std() + eps)
+    return adv
 
 
 def policy_logprobs(params, cfg, rt, tokens, embeds=None):

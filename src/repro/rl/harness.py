@@ -107,6 +107,17 @@ class RealRLHarness:
         # lazy view — snapshot values ARE the legacy self.staleness list
         self.runner.registry.register_view("rl.staleness",
                                            self._staleness_view)
+        # streamed collection: score each response the moment it completes
+        # (while slow tails still decode) instead of at microbatch assembly.
+        # Values are identical either way — partial_credit is a pure function
+        # of (tokens, answer) — so final params don't depend on the policy.
+        self._reward_cache: Dict[int, float] = {}
+        if self.runner.collector.wants_tokens:
+            self.runner.collector.on_row_ready = self._preprocess_row
+
+    def _preprocess_row(self, r: Request):
+        ans = self.dataset.sample(r.group).answer
+        self._reward_cache[r.id] = partial_credit(r.tokens, ans)
 
     def _staleness_view(self) -> Dict:
         if not self.staleness:
@@ -121,6 +132,9 @@ class RealRLHarness:
     # recovery plane: trainer payload of the RunCheckpoint
     # ------------------------------------------------------------------ #
     def _trainer_state_fn(self):
+        # step boundary: every completed row has been consumed by a
+        # microbatch, so the streamed-mode early-reward cache must be dry
+        assert not self._reward_cache
         tree = {"params": self.params, "opt": self.opt}
         if self._accum is not None:
             tree["accum"] = self._accum
@@ -184,15 +198,15 @@ class RealRLHarness:
             tokens[i, :len(seq)] = seq
             mask[i, r.prompt_len:len(seq)] = 1.0
             beh[i, r.prompt_len:r.prompt_len + len(r.logprobs)] = r.logprobs
-            ans = self.dataset.sample(r.group).answer
-            rewards[i] = partial_credit(r.tokens, ans)
+            if r.id in self._reward_cache:      # scored at row completion
+                rewards[i] = self._reward_cache.pop(r.id)
+            else:
+                ans = self.dataset.sample(r.group).answer
+                rewards[i] = partial_credit(r.tokens, ans)
             groups.setdefault(r.group, []).append(i)
         # group-normalized advantages (within this microbatch: groups are
-        # complete by construction of the collector)
-        adv = np.zeros((B,), np.float32)
-        for g, idxs in groups.items():
-            rs = rewards[idxs]
-            adv[idxs] = (rs - rs.mean()) / (rs.std() + 1e-4)
+        # complete by construction of the collection policy)
+        adv = grpo.group_normalized_advantages(rewards, groups)
         self._reward_buf.extend(rewards.tolist())
         # weight-version staleness accounting (per-token span stamps)
         cur = self.runner.store.version

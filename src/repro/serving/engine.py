@@ -490,33 +490,38 @@ class InferenceEngine:
         """Queue prompt(+partial) for batched prefill; returns the reserved
         slot.  The first emitted token arrives from the next ``step()``.
         ``token_ids`` may include previously generated tokens (migration
-        continuation)."""
-        L = len(token_ids)
-        self._check_admission(L, max_total)
-        # pages before the slot: a capped pool rejecting here must not
-        # leak the slot reservation
-        table = self._alloc_table(L)
-        slot = self._reserve_slot(req_id)
-        key_data = np.asarray(jax.random.key_data(key), np.uint32)
-        self.waiting.append(_WaitRow(
-            token_ids=list(token_ids), table=table,
-            members=[(req_id, key_data, max_total, n_prompt, slot)]))
-        return slot
+        continuation).
+
+        Kept as the single-request alias of :meth:`add_group`: a size-1
+        group takes the identical admission / commitment / backpressure
+        path (one ``_check_admission``, pages before the slot), so a
+        capped pool exercises ONE code path whichever door work arrives
+        through."""
+        return self.add_group([(req_id, key, max_total)], token_ids,
+                              n_prompt)[0]
 
     def add_group(self, members: List[Tuple[int, object, int]],
-                  prompt_ids: List[int], n_prompt: int) -> List[int]:
-        """Queue a GRPO group sharing one prompt prefill.
+                  token_ids: List[int], n_prompt: int) -> List[int]:
+        """Queue a group of requests sharing one prefill — THE admission
+        path (``add_request`` delegates here with a size-1 group).
 
-        members: [(req_id, key, max_total)] — all siblings sample from the
-        same prompt.  The prompt is prefilled once; its pages are ref-counted
-        and shared copy-on-write across the G block tables.
-        Returns the reserved slots (one per member).
+        members: [(req_id, key, max_total)] — all members sample from the
+        same ``token_ids`` context.  For a GRPO group that is the shared
+        prompt: it is prefilled once and its pages are ref-counted and
+        shared copy-on-write across the G block tables.  For a size-1
+        group ``token_ids`` may be prompt+partial (migration
+        continuation).  Returns the reserved slots (one per member).
+
+        Admission is commitment-based (``_check_admission`` with the
+        group's worst-case ``max_total``) and pages are allocated BEFORE
+        any slot is reserved: a capped pool rejecting here must not leak
+        slot reservations.
         """
-        L = len(prompt_ids)
+        L = len(token_ids)
         max_tot = max(m[2] for m in members)
         self._check_admission(L, max_tot, need_slots=len(members))
         table = self._alloc_table(L)
-        row = _WaitRow(token_ids=list(prompt_ids), table=table, members=[])
+        row = _WaitRow(token_ids=list(token_ids), table=table, members=[])
         slots = []
         for req_id, key, max_total in members:
             slot = self._reserve_slot(req_id)

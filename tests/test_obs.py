@@ -4,7 +4,6 @@ stall-accounting buckets; every span is well-formed), registry dotted
 names matching the legacy accessors, and the Perfetto export shape."""
 
 import json
-import warnings
 
 import pytest
 
@@ -360,20 +359,6 @@ def test_perfetto_export_one_lane_per_instance(tmp_path):
     # complete events carry microsecond ts/dur and non-negative durations
     xs = [e for e in events if e["ph"] == "X"]
     assert xs and all(e["dur"] >= 0 for e in xs)
-
-
-# --------------------------------------------------------------------------- #
-# spot_trace rename shim
-# --------------------------------------------------------------------------- #
-def test_core_trace_shim_warns_and_reexports():
-    import importlib
-    import repro.core.trace as legacy
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        importlib.reload(legacy)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert legacy.TraceEvent is TraceEvent
-    assert legacy.constant_trace(3)[0].delta == 3
 
 
 # --------------------------------------------------------------------------- #

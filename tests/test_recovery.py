@@ -57,7 +57,7 @@ def test_journal_roundtrip_and_exactly_once():
         j.record_complete(r, step=i // 2)
     j.record_trained(reqs[:3])
     # leaves -> journal round trip preserves the comparand exactly
-    j2 = RunJournal.from_leaves(j.payload_leaves())
+    j2 = RunJournal.from_leaves(j.state_dict())
     assert j2.response_set() == j.response_set()
     assert j2.trained == j.trained
     # request 3 completed but never consumed
@@ -79,11 +79,11 @@ def test_journal_leaves_are_append_only():
     for r in [_req(0), _req(1)]:
         j.record_complete(r, step=0)
     j.record_trained([_req(0), _req(1)])
-    leaf0 = j.payload_leaves()["journal:step:00000000"].tobytes()
+    leaf0 = j.state_dict()["journal:step:00000000"].tobytes()
     for r in [_req(2, group=1), _req(3, group=1)]:
         j.record_complete(r, step=1)
     j.record_trained([_req(2, group=1)])
-    leaves = j.payload_leaves()
+    leaves = j.state_dict()
     assert leaves["journal:step:00000000"].tobytes() == leaf0
     assert "journal:step:00000001" in leaves
 
@@ -196,6 +196,38 @@ def test_crash_resume_bit_identical_sweep(seed, tmp_path):
     assert summary["n_journal_completed"] == len(ref)
     assert summary["n_journal_trained"] == len(ref)
     assert r2.registry.counters["recovery.n_resumes"] == 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_streamed_crash_resume_bit_identical(seed, tmp_path):
+    """The recovery contract holds through a streaming step boundary: a
+    run collecting token-level (collection="streamed") crashes mid-step,
+    resumes from the last RunCheckpoint, and converges to the identical
+    response set — with the streamed collector's counters riding the
+    checkpoint so preprocessing stays exactly-once too."""
+    r0 = _runner(_mkcfg(seed, collection="streamed"))
+    r0.run(n_steps=4)
+    ref = r0.journal.response_set()
+    assert r0.metrics[-1]["rollout.overlap_s"] > 0.0
+
+    d = str(tmp_path)
+    crash_t = r0.metrics[1]["step.t_end"] + 5.0
+    r1 = _runner(_mkcfg(seed, ckpt_dir=d, crash_at=(crash_t,),
+                        collection="streamed"))
+    with pytest.raises(TrainerCrash):
+        r1.run(n_steps=4)
+
+    r2 = HybridRunner.resume(
+        _mkcfg(seed, ckpt_dir=d, crash_at=(crash_t,),
+               collection="streamed"), PERF)
+    assert r2.collector.n_rows_preprocessed > 0      # restored mid-run
+    r2.load_trace(TRACE)
+    r2.run(n_steps=4)
+    assert r2.journal.response_set() == ref
+    check_invariants(r2.manager, [], journal=r2.journal)
+    # every completed row went through the stream exactly once: rows the
+    # crash discarded were re-collected by the resumed timeline
+    assert r2.collector.n_rows_preprocessed == len(ref)
 
 
 def test_double_crash_double_resume(tmp_path):
