@@ -8,7 +8,7 @@
 PY := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
 .PHONY: test lint bench-smoke bench-kernels bench-migration \
-        check-regression refresh-baselines recovery-smoke ci
+        check-regression refresh-baselines recovery-smoke chaos-soak ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -25,6 +25,7 @@ bench-smoke:
 	$(PY) -m benchmarks.run --quick --only integrity
 	$(PY) -m benchmarks.run --quick --only streaming
 	$(PY) -m benchmarks.run --quick --only fault
+	$(PY) -m benchmarks.run --quick --only scenarios
 	$(PY) -m benchmarks.run --quick --only recovery
 	$(PY) -m benchmarks.run --quick --only obs
 
@@ -43,6 +44,13 @@ bench-kernels:
 recovery-smoke:
 	$(PY) -m pytest -x -q tests/test_recovery.py \
 	    -k "crash_resume or double_crash or torn_newest"
+
+# availability-chaos soak: the full scenario matrix (storm, flap,
+# blackout, straggler) over extra seeds, every run gated by the invariant
+# checker (exactly-once + liveness).  Non-blocking CI job — it widens
+# seed coverage beyond the deterministic matrix in bench-smoke.
+chaos-soak:
+	$(PY) -m benchmarks.bench_scenarios --soak
 
 check-regression:
 	$(PY) -m benchmarks.check_regression

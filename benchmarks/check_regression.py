@@ -113,6 +113,20 @@ METRICS = [
     ("fault_handling.json", "chaos_throughput_ratio_hardkill",
      lambda d: d["chaos"]["hard_kill"]["1.0"] / d["chaos"]["hard_kill"]["0.0"],
      dict(rel=0.0, atol=0.30, direction="worse_below")),
+    # availability chaos (PR 10): both metrics run on the modeled event
+    # clock with seeded scenario traces, so they are deterministic.  The
+    # mitigation ratio collapsing toward 1.0 means the straggler detector
+    # stopped moving work off slow instances (the KV-migrate quarantine
+    # path broke, or the rate signal did); the debounced pulls-per-event
+    # creeping up means provisioning hysteresis stopped absorbing
+    # capacity thrash and every flap edge is paying a full weight pull
+    # again.
+    ("scenarios.json", "straggler_mitigation_throughput_ratio",
+     lambda d: d["straggler"]["ratio"],
+     dict(rel=0.0, atol=0.15, direction="worse_below")),
+    ("scenarios.json", "flap_debounce_pulls_per_capacity_event",
+     lambda d: d["flap"]["pulls_per_event_debounced"],
+     dict(rel=0.5, atol=0.1, direction="worse_above")),
     # recovery plane (PR 8): both metrics run on the modeled event clock
     # with a seeded FaultPlan, so they are deterministic.  The overhead
     # fraction creeping up means checkpoints stopped being incremental

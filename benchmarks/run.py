@@ -15,9 +15,10 @@ import traceback
 from benchmarks import (bench_engine, bench_fault_handling, bench_integrity,
                         bench_kernels, bench_migration, bench_motivation,
                         bench_obs, bench_recovery, bench_response_length,
-                        bench_seeding_ablation, bench_static_instances,
-                        bench_streaming, bench_trace_throughput,
-                        bench_transfer, bench_weight_transfer, roofline)
+                        bench_scenarios, bench_seeding_ablation,
+                        bench_static_instances, bench_streaming,
+                        bench_trace_throughput, bench_transfer,
+                        bench_weight_transfer, roofline)
 
 BENCHES = [
     ("fig2_motivation", bench_motivation.main),
@@ -30,6 +31,7 @@ BENCHES = [
     ("engine_horizon", bench_engine.main),
     ("migration", bench_migration.main),
     ("fig15_fault_handling", bench_fault_handling.main),
+    ("availability_scenarios", bench_scenarios.main),
     ("recovery_plane", bench_recovery.main),
     ("fig16_integrity", bench_integrity.main),
     ("streaming_collection", bench_streaming.main),

@@ -79,6 +79,12 @@ FAULT_COUNTERS = (
     "n_trainer_stalled_mb",   # microbatches slowed by a straggler window
     "n_torn_ckpt_writes",     # checkpoint chunks torn by the plan
     "n_ckpt_fallbacks",       # restores that fell back past a bad ckpt
+    # availability-chaos rungs (PR 10)
+    "n_stragglers_flagged",     # instances entering the detector's avoid set
+    "n_stragglers_quarantined", # instances put on rollout probation
+    "n_watchdog_escapes",       # hung requests freed by the no-progress hatch
+    "n_provisions_debounced",   # provisions skipped because capacity flapped away
+    "n_reserved_fallbacks",     # spot blackouts absorbed by the reserved cluster
 )
 
 
@@ -156,6 +162,12 @@ class PeerHealth:
         self._fails[agent_id] = 0
 
     def record_failure(self, agent_id: int, now: float):
+        if self.blacklisted(agent_id, now):
+            # the desperation fallback may still try a blacklisted peer;
+            # those failures must not bank toward an instant re-blacklist
+            # the moment probation expires — expiry hands the agent a
+            # fresh `threshold` budget (regression test in test_scenarios)
+            return
         n = self._fails.get(agent_id, 0) + 1
         self._fails[agent_id] = n
         if n >= self.threshold and not self.blacklisted(agent_id, now):
@@ -185,6 +197,18 @@ class FaultPlan:
     trainer_crash_at: Tuple[float, ...] = ()
     trainer_stall_windows: Tuple[Tuple[float, float, float], ...] = ()
     torn_ckpt_p: float = 0.0
+    # rollout-side performance heterogeneity (availability chaos, PR 10):
+    # the spot-instance analogue of trainer_stall_windows.  A slow spot
+    # instance multiplies its modeled fused-step time by slow_factor —
+    # persistently (drawn with slow_instance_p per instance, or forced via
+    # slow_instance_ids for deterministic tests) and/or inside one
+    # transient brownout window of transient_slow_s drawn with
+    # transient_slow_p.  See FaultPlan.instance_perf.
+    slow_instance_ids: Tuple[int, ...] = ()
+    slow_instance_p: float = 0.0
+    slow_factor: float = 4.0
+    transient_slow_p: float = 0.0
+    transient_slow_s: float = 120.0
     # per-agent flap windows: explicit (t_start, agent_index, duration_s)
     # triples, plus flap_rate synthesized flaps per agent over horizon_s
     agent_flaps: Tuple[Tuple[float, int, float], ...] = ()
@@ -225,6 +249,30 @@ class FaultPlan:
         if not payload:
             return b"\xff"
         return bytes([payload[0] ^ 0xFF]) + payload[1:]
+
+    # ------------------------------------------------------------------ #
+    def instance_perf(self, instance_id: int) -> Tuple[float, Tuple]:
+        """(persistent_factor, slow_windows) for one rollout instance.
+
+        Drawn from a per-instance RNG keyed on (plan seed, instance id) —
+        deliberately NOT ``self._rng``: allocation order varies across
+        scenarios and resume, and an instance's speed must not depend on
+        event order.  ``slow_windows`` is ``((t0, dur, factor), ...)`` in
+        ``trainer_stall_windows`` shape."""
+        persistent = (float(self.slow_factor)
+                      if instance_id in self.slow_instance_ids else 1.0)
+        windows: Tuple = ()
+        if self.slow_instance_p > 0.0 or self.transient_slow_p > 0.0:
+            rng = np.random.RandomState(
+                (self.seed * 2654435761 + instance_id * 40503 + 11)
+                % (2 ** 31))
+            if rng.rand() < self.slow_instance_p:
+                persistent = max(persistent, float(self.slow_factor))
+            if rng.rand() < self.transient_slow_p:
+                t0 = float(rng.uniform(0.0, self.horizon_s))
+                windows = ((t0, float(self.transient_slow_s),
+                            float(self.slow_factor)),)
+        return persistent, windows
 
     # ------------------------------------------------------------------ #
     def trainer_slowdown(self, now: float) -> float:
@@ -311,7 +359,9 @@ def allocator_leak_report(engine) -> List[str]:
     return problems
 
 
-def check_invariants(manager, requests, *, journal=None) -> Dict:
+def check_invariants(manager, requests, *, journal=None,
+                     liveness_window_s: Optional[float] = None,
+                     max_latency_s: Optional[float] = None) -> Dict:
     """Assert the chaos contract after a run; returns a summary dict.
 
     Under any seeded :class:`FaultPlan`:
@@ -324,7 +374,13 @@ def check_invariants(manager, requests, *, journal=None) -> Dict:
         — pass the RESUMED runner's, which carries the checkpoint's
         committed consumption plus everything trained after the restore):
         exactly-once training consumption across any crash — no group's
-        samples consumed twice, none dropped.
+        samples consumed twice, none dropped;
+      * liveness (availability chaos, PR 10): with ``liveness_window_s``,
+        completions per window stay nonzero — no gap between consecutive
+        completions (starting from the batch's earliest ``created_at``)
+        exceeds the window; with ``max_latency_s``, no request starves —
+        every request's ``completed_at - created_at`` stays under the
+        bound.
     Raises :class:`ChaosInvariantError` with the full report otherwise.
     """
     problems: List[str] = []
@@ -348,6 +404,25 @@ def check_invariants(manager, requests, *, journal=None) -> Dict:
                             for p in allocator_leak_report(inst.engine))
     if journal is not None:
         problems.extend(journal.exactly_once_problems())
+    if liveness_window_s is not None and requests:
+        done_ts = sorted(r.completed_at for r in requests
+                         if r.completed_at is not None)
+        prev = min(r.created_at for r in requests)
+        for t in done_ts:
+            if t - prev > liveness_window_s:
+                problems.append(
+                    f"liveness: no completion in ({prev:.1f}, {t:.1f}] — "
+                    f"gap {t - prev:.1f}s exceeds the "
+                    f"{liveness_window_s:.1f}s window")
+                break
+            prev = t
+    if max_latency_s is not None:
+        worst = max(((r.completed_at - r.created_at, r.id) for r in requests
+                     if r.completed_at is not None), default=(0.0, None))
+        if worst[0] > max_latency_s:
+            problems.append(
+                f"starvation: request {worst[1]} took {worst[0]:.1f}s "
+                f"(> {max_latency_s:.1f}s)")
     if problems:
         raise ChaosInvariantError(
             "chaos invariants violated:\n  " + "\n  ".join(problems))

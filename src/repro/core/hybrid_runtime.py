@@ -91,6 +91,31 @@ class RunnerConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 1
     ckpt_keep: int = 3
+    # --- availability chaos (PR 10) --------------------------------------
+    # provisioning debounce/hysteresis: a capacity RISE only provisions
+    # after holding for provision_debounce_s (each provision costs a full
+    # weight pull, so flap traces would otherwise thrash the transfer
+    # plane).  Evictions on capacity DROPS stay immediate — the provider
+    # does not debounce reclaims for us.  0.0 = provision immediately
+    # (bit-identical legacy behavior).
+    provision_debounce_s: float = 0.0
+    # forward-progress guarantee: when spot capacity collapses to zero
+    # mid-step (post-seeding) and stays there, re-purpose the reserved
+    # cluster as rollout engines after reserved_fallback_after_s of
+    # starvation so every run completes (paper technique 1's adaptive
+    # offload, driven to its limit).  Winds down the moment remotes
+    # return (partials KV-migrate out) or rollout finishes.
+    reserved_fallback: bool = True
+    reserved_fallback_after_s: float = 10.0
+    # straggler defenses: a core.stragglers.StragglerConfig (None = off;
+    # the manager then never schedules a detector tick)
+    stragglers: Optional[object] = None
+    # run() auto-runs faults.check_invariants at completion when set —
+    # benches/tests opt in instead of hand-calling it.  liveness_window_s
+    # / max_latency_s feed the liveness extension (None = skip that check).
+    verify_invariants: bool = False
+    liveness_window_s: Optional[float] = None
+    max_latency_s: Optional[float] = None
 
 
 class HybridRunner:
@@ -153,7 +178,7 @@ class HybridRunner:
             decode_horizon=cfg.decode_horizon,
             migration=cfg.migration, kv_codec=cfg.kv_codec,
             kv_sim_chunks=max(cfg.transfer_chunks // 4, 1),
-            faults=cfg.fault_plan,
+            faults=cfg.fault_plan, stragglers=cfg.stragglers,
             registry=self.registry, tracer=self.tracer)
         if cfg.fault_plan is not None:
             cfg.fault_plan.install(self.loop, self.store.agents)
@@ -189,6 +214,16 @@ class HybridRunner:
             self.manager.on_token_cb = self.collector.on_token
 
         self.capacity = 0                   # trace-provided availability
+        # provisioning debounce (PR 10): the armed one-shot timer (None =
+        # disarmed) and the target it was armed against (for churn
+        # accounting); plus the reserved-fallback state machine
+        self._provision_at: Optional[float] = None
+        self._provision_target = 0
+        self.n_capacity_events = 0
+        self._fallback_active = False
+        self._starving_since: Optional[float] = None
+        self._progress_epoch = 0
+        self._locals: List = []
         self.rng = np.random.RandomState(cfg.seed + 17)
         self._next_req_id = 0
         self._next_group = 0
@@ -235,6 +270,8 @@ class HybridRunner:
 
     def _capacity_change(self, delta: int):
         self.capacity = max(self.capacity + delta, 0)
+        if delta != 0:
+            self.n_capacity_events += 1
         if delta < 0:
             # a trace event may reclaim SEVERAL instances at once (multi-
             # node preemption): evict oldest-first until within capacity
@@ -251,11 +288,47 @@ class HybridRunner:
     def _reconcile(self):
         if self.cfg.mode == "colocated":
             return
-        limit = (self.cfg.disagg_instances if self.cfg.mode == "disagg"
-                 else self.scheduler.max_instances())
-        while self.manager.n_remote() < min(self.capacity, limit):
+        target = min(self.capacity, self._instance_limit())
+        d = self.cfg.provision_debounce_s
+        if d > 0.0:
+            # hysteresis: provisioning is a DEFERRED decision — capacity
+            # must still be there when the timer fires, or the provision
+            # (and its weight pull) never happens.  Evictions above are
+            # immediate; only growth debounces.
+            if self.manager.n_remote() < target:
+                if self._provision_at is None:
+                    self._provision_at = self.loop.now + d
+                    self._provision_target = target
+                    self.loop.at(self._provision_at, self._provision_fire)
+                else:
+                    # track the peak the armed timer was promised, so the
+                    # churn counter sees what flapping took away
+                    self._provision_target = max(self._provision_target,
+                                                 target)
+            return
+        self._provision_now(target)
+
+    def _instance_limit(self) -> int:
+        return (self.cfg.disagg_instances if self.cfg.mode == "disagg"
+                else self.scheduler.max_instances())
+
+    def _provision_now(self, target: int):
+        while self.manager.n_remote() < target:
             self.manager.allocate()
             self._record_n()
+        if self._fallback_active and self.manager.n_remote() > 0:
+            # blackout over: remotes are back, wind the reserved rollout
+            # engines down (their partials KV-migrate out on release)
+            self._end_reserved_fallback()
+
+    def _provision_fire(self):
+        armed_target = self._provision_target
+        self._provision_at = None
+        target = min(self.capacity, self._instance_limit())
+        skipped = max(armed_target - target, 0)
+        if skipped:
+            self.manager.fault_stats.n_provisions_debounced += skipped
+        self._provision_now(target)
 
     def _record_n(self):
         self._n_series.append((self.loop.now, self.manager.n_remote()))
@@ -294,6 +367,8 @@ class HybridRunner:
         cfg = self.cfg
         self._step_active = True
         self._rollout_done = False
+        self._fallback_active = False
+        self._starving_since = None
         self._t_train = 0.0
         self._t_train_wait = 0.0
         self._t_overlap = 0.0
@@ -359,6 +434,15 @@ class HybridRunner:
             self._trainer_available_at = float("inf")  # set at rollout end
         self._idle_since = self._trainer_available_at
 
+        # forward-progress watchdog (PR 10): a per-step monitor chain that
+        # triggers the reserved rollout fallback if spot capacity collapses
+        # to zero post-seeding and stays there.  The epoch token kills any
+        # stale chain from a previous step.
+        if cfg.mode == "rlboost" and cfg.reserved_fallback:
+            self._progress_epoch += 1
+            ep = self._progress_epoch
+            self.loop.schedule(5.0, lambda: self._check_progress(ep))
+
     def _end_seeding(self):
         if not self._step_active:
             return
@@ -373,6 +457,62 @@ class HybridRunner:
         if self._seed_span is not None:
             self.tracer.end(self._seed_span)
             self._seed_span = None
+        self._trainer_available_at = self.loop.now
+        self._idle_since = self.loop.now
+        self._try_train()
+
+    # ------------------------------------------------------------------ #
+    # forward-progress guarantee (availability chaos, PR 10)
+    # ------------------------------------------------------------------ #
+    def _check_progress(self, epoch: int):
+        if epoch != self._progress_epoch or not self._step_active:
+            return
+        # starving: rollout unfinished, nothing local, no remotes, and the
+        # trace says none are coming (capacity 0) — _end_seeding's keep-
+        # seeding path covers the seeding window, this covers post-handoff
+        starving = (not self._rollout_done and not self._locals
+                    and self.manager.n_remote() == 0 and self.capacity == 0)
+        if starving:
+            if self._starving_since is None:
+                self._starving_since = self.loop.now
+            elif (self.loop.now - self._starving_since
+                  >= self.cfg.reserved_fallback_after_s):
+                self._start_reserved_fallback()
+        else:
+            self._starving_since = None
+        self.loop.schedule(5.0, lambda: self._check_progress(epoch))
+
+    def _start_reserved_fallback(self):
+        """Total spot blackout mid-step: the reserved cluster stops
+        training and runs rollout itself so the step ALWAYS completes —
+        paper technique 1's adaptive offload driven to its limit.  Winds
+        down (partials KV-migrate back out) the moment remotes return."""
+        cfg = self.cfg
+        self._fallback_active = True
+        self._starving_since = None
+        self.manager.fault_stats.n_reserved_fallbacks += 1
+        self.tracer.event("fallback.reserved", "trainer",
+                          step=self.step_idx)
+        chips_per_engine = max(
+            cfg.n_reserved_nodes * RESERVED_NODE.chips
+            // max(self.scheduler.n_resv, 1), 1)
+        local_kind = InstanceKind("local-engine", chips_per_engine,
+                                  RESERVED_NODE.dcn_gbps)
+        for _ in range(self.scheduler.n_resv):
+            inst = self.manager.allocate(
+                local=True, kind=local_kind,
+                max_exec=cfg.local_max_exec // max(self.scheduler.n_resv, 1))
+            self._locals.append(inst)
+        # the reserved chips are decoding now, not training
+        self._trainer_available_at = float("inf")
+        self._idle_since = float("inf")
+
+    def _end_reserved_fallback(self):
+        self._fallback_active = False
+        for inst in self._locals:
+            self.manager.release(inst)   # partials ride the KV plane out
+        self._locals = []
+        self.tracer.event("fallback.end", "trainer", step=self.step_idx)
         self._trainer_available_at = self.loop.now
         self._idle_since = self.loop.now
         self._try_train()
@@ -395,6 +535,10 @@ class HybridRunner:
                 self._locals = []
                 self._trainer_available_at = self.loop.now
                 self._idle_since = self.loop.now
+            elif self._fallback_active:
+                # the reserved fallback finished the step's rollout itself —
+                # hand the chips back to training for the consume phase
+                self._end_reserved_fallback()
         self.collector.add(r)
         if self._rollout_done:
             self._try_train()
@@ -690,4 +834,10 @@ class HybridRunner:
         for s in self.tracer.spans():
             if not s.closed:
                 self.tracer.end(s, truncated=True)
+        if self.cfg.verify_invariants:
+            from repro.core.faults import check_invariants
+            check_invariants(self.manager, self._step_requests,
+                             journal=self.journal,
+                             liveness_window_s=self.cfg.liveness_window_s,
+                             max_latency_s=self.cfg.max_latency_s)
         return self.metrics

@@ -98,6 +98,16 @@ class RolloutInstance:
         self.last_active_t = loop.now
         self.created_t = loop.now
         self._gen = np.random.RandomState(rng_seed * 2654435761 % (2**31))
+        # straggler plane (PR 10): quarantine gate + this instance's drawn
+        # performance heterogeneity (persistent slow factor and transient
+        # brownout windows — the spot analogue of trainer_stall_windows).
+        # Locals run on the reserved cluster and are never heterogeneous.
+        self.quarantined_until = -float("inf")
+        plan = getattr(manager, "faults", None)
+        if plan is not None and not local and hasattr(plan, "instance_perf"):
+            self._perf_base, self._slow_windows = plan.instance_perf(id)
+        else:
+            self._perf_base, self._slow_windows = 1.0, ()
 
     @property
     def tracer(self):
@@ -139,7 +149,24 @@ class RolloutInstance:
 
     def accepts_work(self) -> bool:
         return (self.alive
+                and not self.quarantined()
                 and self.weight_version >= self.manager.required_version)
+
+    def quarantined(self) -> bool:
+        """On straggler probation: weights stay warm, no new work until
+        the window expires (transient slowness heals in place)."""
+        return self.loop.now < self.quarantined_until
+
+    def perf_factor(self, now: Optional[float] = None) -> float:
+        """Step-time multiplier from the fault plan's heterogeneity draw:
+        persistent slow factor, raised further inside brownout windows."""
+        f = self._perf_base
+        if self._slow_windows:
+            t = self.loop.now if now is None else now
+            for t0, dur, factor in self._slow_windows:
+                if t0 <= t < t0 + dur:
+                    f = max(f, float(factor))
+        return f
 
     # ---------------- work intake ---------------- #
     def assign(self, req: Request):
@@ -536,6 +563,13 @@ class RolloutInstance:
                 prefix_tokens=self._pending_prefill_prefix_tokens)
             self._pending_prefill_tokens = 0
             self._pending_prefill_prefix_tokens = 0.0
+        # straggler heterogeneity: a slow instance's fused step takes
+        # factor x longer wall-clock for the SAME work.  Both split legs
+        # scale, so busy-bucket pro-rata and the retroactive spans stay
+        # aligned with the stretched dt.
+        f = self.perf_factor()
+        t_decode *= f
+        t_prefill *= f
         self._next_split = (t_decode, t_prefill)
         return t_decode + t_prefill
 

@@ -85,25 +85,35 @@ class LoadBalancer:
         return min(cands, key=lambda i: (i.n_pending(), i.n_executing(), i.id))
 
     # -------------------- CONTINUOUSLB (lines 13-25) --------------------- #
-    def rebalance(self, instances: List[InstanceView]
+    def rebalance(self, instances: List[InstanceView],
+                  avoid: frozenset = frozenset()
                   ) -> List[Tuple[int, int, int]]:
-        """Returns migration orders [(src_id, dst_id, n_requests)]."""
+        """Returns migration orders [(src_id, dst_id, n_requests)].
+
+        ``avoid`` (PR 10) holds ids the straggler detector has struck but
+        not yet quarantined: they are never chosen as *destinations*, and
+        they are preferred as *sources* — new work drifts away from a
+        suspect instance before the quarantine verdict lands."""
         live = [i for i in instances if i.accepts_work()]
         if len(live) < 2:
             return []
         orders: List[Tuple[int, int, int]] = []
-        drained = [i for i in live if i.n_pending() == 0]
+        drained = [i for i in live
+                   if i.n_pending() == 0 and i.id not in avoid]
         backlogged = [i for i in live if i.n_pending() > 0]
         if drained and backlogged:
-            j = max(backlogged, key=lambda i: i.n_pending())
+            j = max(backlogged, key=lambda i: (i.id in avoid, i.n_pending()))
             # migrate a single pending request at a time (line 20)
             dst = min(drained, key=lambda i: (i.n_executing(), i.id))
             if dst.id != j.id:
                 orders.append((j.id, dst.id, 1))
             return orders
-        idle = [i for i in live if i.n_executing() == 0]
+        idle = [i for i in live
+                if i.n_executing() == 0 and i.id not in avoid]
         if idle:
-            j = max(live, key=lambda i: i.n_executing())
+            j = max(live, key=lambda i: (i.id in avoid
+                                         and i.n_executing() > 0,
+                                         i.n_executing()))
             B = self.profile.plateau()
             if B is not None and j.n_executing() > 0:
                 r = max(j.n_executing() - B, 0)      # line 24

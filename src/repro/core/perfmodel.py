@@ -137,6 +137,16 @@ class ModelPerf:
                                        ctx_lens=cl)
         return t + self.dispatch_overhead_s
 
+    def decode_tokens_per_s(self, kind: InstanceKind, batch: int,
+                            avg_ctx: float, cfg=None, ctx_lens=None,
+                            horizon: int = 1) -> float:
+        """Modeled healthy decode rate (tokens/s for the whole batch) —
+        the straggler detector's cold-start reference when too few peers
+        exist for a trustworthy fleet median (PR 10)."""
+        t = self.decode_horizon_time(kind, batch, avg_ctx, cfg,
+                                     ctx_lens=ctx_lens, horizon=horizon)
+        return batch * horizon / max(t, 1e-12)
+
     def prefill_time(self, kind: InstanceKind, n_tokens: int, cfg=None,
                      prefix_tokens: float = 0.0) -> float:
         """Prefill roofline: compute-bound at prefill MFU, except that

@@ -24,6 +24,7 @@ from repro.core.instance import RolloutInstance
 from repro.core.load_balancer import LoadBalancer
 from repro.core.perfmodel import InstanceKind, ModelPerf, SPOT_INSTANCE
 from repro.core.requests import Request, Status
+from repro.core.stragglers import StragglerConfig, StragglerDetector
 from repro.core.weight_transfer import WeightStore
 from repro.obs.accounting import LaneAccount
 from repro.obs.metrics import MetricsRegistry, RegistryCounter
@@ -46,6 +47,7 @@ class RolloutManager:
     kv_stall_s = RegistryCounter("migration.kv_stall_s")
     n_duplicate_completions = RegistryCounter(
         "rollout.n_duplicate_completions")
+    n_provisions = RegistryCounter("rollout.n_provisions")
     n_chunk_fetches = RegistryCounter("transfer.pull.n_chunk_fetches")
     n_chunk_cache_hits = RegistryCounter("transfer.pull.n_cache_hits")
 
@@ -66,6 +68,7 @@ class RolloutManager:
                  kv_codec: str = "none",              # | "int8"
                  kv_sim_chunks: int = 8,
                  faults: Optional[FaultPlan] = None,
+                 stragglers: Optional[StragglerConfig] = None,
                  registry: Optional[MetricsRegistry] = None,
                  tracer=None):
         # flight recorder: the registry backs every counter below (and the
@@ -110,6 +113,20 @@ class RolloutManager:
             threshold=(faults.blacklist_threshold if faults else 3),
             probation_s=(faults.probation_s if faults else 30.0),
             stats=self.fault_stats)
+        # straggler plane (PR 10): with stragglers=None (the default) no
+        # periodic tick is ever scheduled — behaviour is bit-identical to
+        # earlier PRs (and the detector is deliberately NOT part of any
+        # checkpoint: resume determinism covers the completed-response
+        # set, not which instance ran what)
+        self.straggler_cfg = stragglers
+        self.detector = (StragglerDetector(stragglers,
+                                           stats=self.fault_stats,
+                                           expected_rate_fn=self._expected_rate)
+                         if stragglers is not None and stragglers.enabled
+                         else None)
+        self._straggler_running = False
+        # watchdog memory: req_id -> (n_generated at last check, since when)
+        self._watchdog_seen: Dict[int, tuple] = {}
 
         self.instances: Dict[int, RolloutInstance] = {}
         # stall accounting: ledgers of dead instances stay here so the
@@ -135,6 +152,7 @@ class RolloutManager:
         self.n_migrations = 0       # partial-preserving moves only
         self.n_restarts = 0         # recompute-mode restarts (tokens lost)
         self.n_duplicate_completions = 0   # exactly-once violation counter
+        self.n_provisions = 0       # remote allocations (each costs a pull)
         self._lb_running = False
         # KV-page migration accounting
         self._next_mig_id = 1
@@ -198,8 +216,10 @@ class RolloutManager:
                 engine.load_weights(self.store.snapshot, self.store.version)
             self._dispatch()
         else:
+            self.n_provisions += 1
             self._provision(inst)
         self._ensure_lb()
+        self._ensure_stragglers()
         return inst
 
     def _adopt_orphan_cache(self) -> Optional[Dict]:
@@ -530,6 +550,118 @@ class RolloutManager:
         self._dispatch()                          # delayed dispatch wakes up
 
     # ------------------------------------------------------------------ #
+    # straggler defenses (availability chaos, PR 10)
+    # ------------------------------------------------------------------ #
+    def _expected_rate(self, inst: RolloutInstance) -> float:
+        """Modeled healthy per-slot token rate — the detector's reference
+        when too few peers exist for a fleet median."""
+        n = max(inst.n_executing(), 1)
+        ctx = [r.total_len for r in inst.executing.values()] or [0]
+        return self.perf.decode_tokens_per_s(
+            inst.kind, n, float(sum(ctx)) / len(ctx), self.cfg,
+            horizon=inst.horizon) / n
+
+    def _ensure_stragglers(self):
+        cfg = self.straggler_cfg
+        if cfg is None or (self.detector is None and cfg.watchdog_s <= 0.0):
+            return
+        if not self._straggler_running:
+            self._straggler_running = True
+            self.loop.schedule(cfg.window_s, self._straggler_tick)
+
+    def _straggler_tick(self):
+        cfg = self.straggler_cfg
+        # only spot instances are suspects: locals run on the reserved
+        # cluster and tearing down a seeding engine mid-handoff for being
+        # "slow" relative to remotes would be nonsense
+        live = [i for i in self.instances.values() if i.alive and not i.local]
+        if not live and not self._watchdog_seen:
+            self._straggler_running = False
+            return
+        if self.detector is not None:
+            for inst in self.detector.tick(live, self.loop.now):
+                self.quarantine_straggler(inst)
+        if cfg.watchdog_s > 0.0:
+            self._watchdog_check(cfg.watchdog_s)
+        self.loop.schedule(cfg.window_s, self._straggler_tick)
+
+    def quarantine_straggler(self, inst: RolloutInstance):
+        """Mitigation rung: KV-migrate the flagged instance's work off
+        (zero recompute — the PR 4 migration path) and put the instance
+        itself on PeerHealth-style probation.  It keeps its weights and
+        may rejoin after ``quarantine_s``: transient slowness heals in
+        place, persistent slowness re-flags within ``patience`` windows."""
+        others = [i for i in self.live_instances()
+                  if i is not inst and i.accepts_work()]
+        if not others:
+            return   # never quarantine the only worker: liveness first
+        cfg = self.straggler_cfg
+        inst.quarantined_until = self.loop.now + cfg.quarantine_s
+        self.fault_stats.n_stragglers_quarantined += 1
+        if self.detector is not None:
+            self.detector.clear(inst.id)   # fresh patience budget on rejoin
+        self.tracer.event("straggler.quarantine", inst.lane, inst=inst.id,
+                          until=inst.quarantined_until)
+        if self.fault_mode != "recompute":
+            inst.export_kv_requests(list(inst.executing.values()))
+        for r in inst.drain_all():
+            r.n_migrations += 1
+            self.n_migrations += 1
+            r.status = Status.QUEUED
+            r.instance_id = None
+            self.queued.append(r)
+        inst.account_sync()
+        # probation expiry must wake dispatch: with the whole fleet
+        # quarantined-then-healed, nothing else would drain the queue
+        self.loop.at(inst.quarantined_until, self._dispatch)
+        self._dispatch()
+
+    def _watchdog_check(self, watchdog_s: float):
+        """Per-request no-progress watchdog: a request whose token counter
+        has not moved for a full ``watchdog_s`` gets the escape hatch —
+        KV-export + requeue, with the hung source briefly quarantined when
+        a peer exists (so the request actually *migrates*); with no peer
+        it restarts in place via fresh admission."""
+        now = self.loop.now
+        seen = self._watchdog_seen
+        live_req_ids = set()
+        for inst in list(self.instances.values()):
+            if not inst.alive:
+                continue
+            for r in list(inst.executing.values()):
+                live_req_ids.add(r.id)
+                prev = seen.get(r.id)
+                if prev is None or prev[0] != r.n_generated:
+                    seen[r.id] = (r.n_generated, now)
+                    continue
+                if now - prev[1] < watchdog_s:
+                    continue
+                seen.pop(r.id, None)
+                self.fault_stats.n_watchdog_escapes += 1
+                self.tracer.event("watchdog.escape", inst.lane,
+                                  req=r.id, inst=inst.id)
+                if self.fault_mode != "recompute":
+                    inst.export_kv_requests([r])
+                got = inst.take_back(r.id)
+                if got is None:
+                    continue
+                r.n_migrations += 1
+                self.n_migrations += 1
+                r.status = Status.QUEUED
+                r.instance_id = None
+                self.queued.append(r)
+                others = [i for i in self.live_instances()
+                          if i is not inst and i.accepts_work()]
+                if others:
+                    inst.quarantined_until = max(
+                        inst.quarantined_until, now + watchdog_s)
+                inst.account_sync()
+        # forget requests that completed or left executing
+        for k in [k for k in seen if k not in live_req_ids]:
+            del seen[k]
+        self._dispatch()
+
+    # ------------------------------------------------------------------ #
     # continuous load balancing
     # ------------------------------------------------------------------ #
     def _ensure_lb(self):
@@ -542,7 +674,9 @@ class RolloutManager:
         if not live:
             self._lb_running = False
             return
-        orders = self.lb.rebalance(live)
+        avoid = (frozenset(self.detector.flagged)
+                 if self.detector is not None else frozenset())
+        orders = self.lb.rebalance(live, avoid=avoid)
         for src_id, dst_id, n in orders:
             src = self.instances.get(src_id)
             dst = self.instances.get(dst_id)

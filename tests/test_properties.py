@@ -110,3 +110,26 @@ def test_sampler_position_keyed_determinism(seed):
     kd3 = jnp.concatenate([jnp.zeros((2, 2), jnp.uint32), kd], axis=0)
     b = sample_token(logits2, kd3, jnp.array([9, 2, 5]), 1.0)
     assert int(a[0]) == int(b[2])
+
+
+# --------------------------------------------------------------------------- #
+from repro.core.spot_trace import (SCENARIOS, make_scenario,
+                                   validate_events)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from(sorted(SCENARIOS)),
+       st.integers(0, 2 ** 31 - 1),
+       st.floats(60.0, 7200.0))
+def test_scenario_traces_well_formed(name, seed, duration):
+    """Availability chaos (PR 10): every scenario generator, under ANY
+    seed and duration, yields a sorted trace whose events land in
+    [0, duration] and whose running capacity never goes negative — and
+    the trace is a pure function of (name, seed, duration)."""
+    ev = make_scenario(name, seed=seed, duration=duration)
+    validate_events(ev, duration)
+    cap = 0
+    for e in ev:
+        cap += e.delta
+        assert cap >= 0
+    assert ev == make_scenario(name, seed=seed, duration=duration)

@@ -1,0 +1,424 @@
+"""Availability chaos (PR 10): the scenario trace library, straggler and
+hang defenses, debounced provisioning, and the forward-progress guarantee.
+
+Availability is an input distribution, not a single trace: seeded scenario
+generators (storms, blackouts, flap, diurnal, bursts) drive the same
+runner the Bamboo segments do, and the chaos contract grows liveness
+teeth — completions per window stay nonzero, no request starves, and a
+total spot blackout still finishes the step on the reserved fallback.
+"""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.faults import (ChaosInvariantError, FaultPlan, FaultStats,
+                               PeerHealth, check_invariants)
+from repro.core.hybrid_runtime import HybridRunner, RunnerConfig
+from repro.core.perfmodel import model_perf_from_cfg
+from repro.core.requests import Request, Status
+from repro.core.spot_trace import (DURATION_S, SCENARIOS, TraceEvent,
+                                   capacity_at, capacity_flap, make_scenario,
+                                   preemption_storm, scenario_fault_plan,
+                                   spot_blackout, synthesize_segment,
+                                   validate_events)
+from repro.core.stragglers import StragglerConfig, StragglerDetector
+from repro.obs.accounting import aggregate
+
+
+CFG_M = get_config("qwen3-8b")
+PERF = model_perf_from_cfg(CFG_M)
+
+
+def _runner(trace, *, plan=None, seed=0, n_prompts=8, mean_response=800,
+            **cfg_kw):
+    kw = dict(mode="rlboost", n_prompts=n_prompts, group_size=4,
+              mean_response=mean_response, max_response=4096, m_b=8,
+              seed=seed, t_seed_init=5.0, length_sigma=0.3,
+              fault_plan=plan)
+    kw.update(cfg_kw)
+    r = HybridRunner(RunnerConfig(**kw), PERF, model_cfg=CFG_M)
+    r.load_trace(list(trace))
+    return r
+
+
+# --------------------------------------------------------------------------- #
+# scenario trace library: the generator contract
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_scenario_contract(name, seed):
+    """Every scenario, every seed: sorted, clamped into the duration,
+    capacity never below zero, and deterministic from the seed."""
+    ev = make_scenario(name, seed=seed, duration=600.0)
+    assert ev == make_scenario(name, seed=seed, duration=600.0)
+    validate_events(ev, 600.0)          # sorted + in-range or it asserts
+    cap = 0
+    for e in ev:
+        cap += e.delta
+        assert cap >= 0, f"{name}/{seed}: capacity {cap} after t={e.t}"
+    assert ev and ev[0].t == 0.0 and ev[0].delta > 0
+
+
+def test_scenario_unknown_name():
+    with pytest.raises(KeyError):
+        make_scenario("does-not-exist")
+
+
+def test_storm_has_correlated_reclaim():
+    """A storm must contain at least one multi-node reclaim event — the
+    whole point is correlated failure, not independent churn."""
+    for seed in range(5):
+        ev = preemption_storm(seed, 1200.0, base=8)
+        assert min(e.delta for e in ev) <= -2, f"seed {seed}"
+
+
+def test_blackout_reaches_zero_capacity():
+    for seed in range(5):
+        ev = spot_blackout(seed, 1200.0, base=6, blackout_s=300.0)
+        drop = [e for e in ev if e.delta < 0]
+        assert drop and capacity_at(ev, drop[0].t) == 0, f"seed {seed}"
+        # ...and recovers before the trace ends
+        assert capacity_at(ev, 1200.0) > 0
+
+
+def test_flap_alternates_within_bounds():
+    ev = capacity_flap(3, 300.0, base=6, amplitude=2, period_s=30.0)
+    caps = [capacity_at(ev, e.t) for e in ev]
+    assert min(caps) >= 4 and max(caps) <= 6
+    assert len(ev) >= 6                     # it actually flaps
+
+
+def test_scenario_fault_plan_presets():
+    plan = scenario_fault_plan("straggler", seed=3)
+    assert plan.slow_instance_p > 0.0 and plan.slow_factor > 1.0
+    assert scenario_fault_plan("storm", seed=1).hard_kill_fraction > 0.0
+    # overrides win over presets
+    assert scenario_fault_plan("storm", seed=1, grace_s=9.0).grace_s == 9.0
+
+
+# --------------------------------------------------------------------------- #
+# satellite: synthesize_segment clamps event times into the duration
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(6))
+def test_synthesize_segment_clamped_and_sorted(seed):
+    """Short durations used to push sampled event times past the end of
+    the segment; now every event lands in [0, duration], sorted."""
+    for duration in (100.0, 37.5, DURATION_S):
+        ev = synthesize_segment("A", seed=seed, duration=duration)
+        validate_events(ev, duration)
+        cap = 0
+        for e in ev:
+            cap += e.delta
+            assert cap >= 0
+
+
+# --------------------------------------------------------------------------- #
+# satellite: PeerHealth probation-expiry regression
+# --------------------------------------------------------------------------- #
+def test_peer_health_probation_expiry_resets_budget():
+    """Failures recorded DURING probation (the desperation fallback still
+    tries blacklisted peers) must not bank toward an instant re-blacklist
+    the moment probation expires — expiry hands back a fresh budget."""
+    ph = PeerHealth(threshold=3, probation_s=10.0, stats=FaultStats())
+    for _ in range(3):
+        ph.record_failure(7, now=0.0)
+    assert ph.blacklisted(7, now=5.0)
+    # desperation retries keep failing during probation
+    for t in (2.0, 4.0, 6.0):
+        ph.record_failure(7, now=t)
+    assert not ph.blacklisted(7, now=10.0)      # probation over
+    ph.record_failure(7, now=11.0)              # ONE fresh failure...
+    assert not ph.blacklisted(7, now=11.5)      # ...must NOT re-blacklist
+    ph.record_failure(7, now=12.0)
+    ph.record_failure(7, now=13.0)              # three fresh ones do
+    assert ph.blacklisted(7, now=13.5)
+
+
+# --------------------------------------------------------------------------- #
+# satellite: multi-instance reclaim in _capacity_change
+# --------------------------------------------------------------------------- #
+def test_capacity_change_evicts_oldest_first():
+    """One trace event reclaiming several instances must evict oldest-
+    first and account the grace windows; nothing may be lost."""
+    plan = FaultPlan(seed=0, grace_s=3.0)
+    r = _runner([TraceEvent(0.0, 4), TraceEvent(30.0, -3)], plan=plan,
+                n_prompts=12, mean_response=1500)
+    evicted = []
+    orig = r.manager.preempt
+
+    def spy(inst, grace_s=None):
+        evicted.append(inst.created_t)
+        return orig(inst, grace_s=grace_s)
+
+    r.manager.preempt = spy
+    r.run(n_steps=1)
+    assert len(evicted) >= 3
+    first = evicted[:3]                      # the trace-driven reclaim
+    assert first == sorted(first), "evictions must be oldest-first"
+    assert r.manager.n_preemptions >= 3
+    agg = aggregate(r.manager.accounts(), r.loop.now)
+    assert agg["grace_s"] > 0.0              # notice windows were charged
+    check_invariants(r.manager, r._step_requests)
+
+
+# --------------------------------------------------------------------------- #
+# straggler detector: unit behaviour
+# --------------------------------------------------------------------------- #
+class _FakeInst:
+    def __init__(self, id, rate):
+        self.id = id
+        self.rate = rate                    # tokens per window per slot
+        self.tokens_out = 0
+
+    def advance(self, window_s):
+        self.tokens_out += int(self.rate * window_s)
+
+    def n_executing(self):
+        return 1
+
+
+def test_straggler_detector_flags_then_quarantines():
+    cfg = StragglerConfig(window_s=10.0, ratio=0.5, patience=2, min_peers=3)
+    stats = FaultStats()
+    det = StragglerDetector(cfg, stats=stats)
+    insts = [_FakeInst(0, 100.0), _FakeInst(1, 100.0),
+             _FakeInst(2, 100.0), _FakeInst(3, 10.0)]
+    det.tick(insts, 0.0)                    # baseline window
+    for inst in insts:
+        inst.advance(10.0)
+    assert det.tick(insts, 10.0) == []      # strike 1: flagged, not victim
+    assert det.flagged == {3}
+    assert stats.n_stragglers_flagged == 1
+    for inst in insts:
+        inst.advance(10.0)
+    victims = det.tick(insts, 20.0)         # strike 2 = patience: victim
+    assert [v.id for v in victims] == [3]
+    det.clear(3)
+    assert det.flagged == set()
+
+
+def test_straggler_detector_recovery_unflags():
+    cfg = StragglerConfig(window_s=10.0, ratio=0.5, patience=3, min_peers=3)
+    det = StragglerDetector(cfg)
+    insts = [_FakeInst(i, 100.0) for i in range(3)] + [_FakeInst(3, 10.0)]
+    det.tick(insts, 0.0)
+    for inst in insts:
+        inst.advance(10.0)
+    det.tick(insts, 10.0)
+    assert det.flagged == {3}
+    insts[3].rate = 100.0                   # transient slowness heals
+    for inst in insts:
+        inst.advance(10.0)
+    assert det.tick(insts, 20.0) == []
+    assert det.flagged == set()
+
+
+def test_straggler_detector_uses_model_below_min_peers():
+    cfg = StragglerConfig(window_s=10.0, ratio=0.5, patience=1, min_peers=3)
+    det = StragglerDetector(cfg, expected_rate_fn=lambda inst: 100.0)
+    insts = [_FakeInst(0, 10.0), _FakeInst(1, 10.0)]   # both slow: median
+    det.tick(insts, 0.0)                               # would hide them
+    for inst in insts:
+        inst.advance(10.0)
+    victims = det.tick(insts, 10.0)
+    assert {v.id for v in victims} == {0, 1}
+
+
+# --------------------------------------------------------------------------- #
+# straggler mitigation end-to-end: quarantine + KV-migrate off
+# --------------------------------------------------------------------------- #
+def test_straggler_quarantined_end_to_end():
+    plan = FaultPlan(seed=0, slow_instance_ids=(0,), slow_factor=8.0)
+    sc = StragglerConfig(window_s=2.0, patience=2, quarantine_s=500.0,
+                         min_peers=3)
+    r = _runner([TraceEvent(0.0, 3)], plan=plan, stragglers=sc,
+                verify_invariants=True)
+    r.run(n_steps=1)
+    fs = r.manager.fault_stats
+    assert fs.n_stragglers_flagged >= 1
+    assert fs.n_stragglers_quarantined >= 1
+    assert all(x.done for x in r._step_requests)
+
+
+def test_watchdog_escapes_hung_request():
+    """A hung instance (token counter frozen) cannot be seen by the rate
+    detector if it is the reference itself — the per-request watchdog
+    frees its requests regardless."""
+    sc = StragglerConfig(enabled=False, watchdog_s=20.0, window_s=5.0)
+    r = _runner([TraceEvent(0.0, 2)], plan=FaultPlan(seed=0),
+                stragglers=sc, verify_invariants=True)
+    orig_alloc = r.manager.allocate
+    hung = {}
+
+    def alloc(*a, **kw):
+        inst = orig_alloc(*a, **kw)
+        if not inst.local and not hung:     # first remote hangs forever
+            hung["id"] = inst.id
+            inst._step_time = lambda: 1e9
+        return inst
+
+    r.manager.allocate = alloc
+    r.run(n_steps=1)
+    assert r.manager.fault_stats.n_watchdog_escapes >= 1
+    assert all(x.done for x in r._step_requests)
+
+
+def test_stragglers_none_is_inert():
+    """Default config schedules no detector tick: metrics bit-identical."""
+    def run(stragglers):
+        r = _runner([TraceEvent(0.0, 3)], plan=FaultPlan(seed=4),
+                    seed=4, stragglers=stragglers)
+        m = r.run(n_steps=1)
+        return m[-1]["step.time_s"], m[-1]["step.tokens"]
+
+    assert run(None) == run(StragglerConfig(enabled=False))
+
+
+# --------------------------------------------------------------------------- #
+# debounced provisioning: flap absorption
+# --------------------------------------------------------------------------- #
+def _flap_run(debounce):
+    # base=4 straddles the fleet limit so the flap actually evicts and
+    # re-provisions; 10s period against a 30s debounce = pure thrash
+    r = _runner(capacity_flap(2, 600.0, base=4, amplitude=2, period_s=10.0),
+                plan=FaultPlan(seed=2, grace_s=2.0), seed=2,
+                n_prompts=12, mean_response=1500,
+                provision_debounce_s=debounce, verify_invariants=True)
+    r.run(n_steps=2)
+    return r
+
+
+def test_flap_debounce_cuts_provisioning_churn():
+    r0 = _flap_run(0.0)
+    r1 = _flap_run(30.0)
+    assert r1.manager.n_provisions < r0.manager.n_provisions
+    # pulls PER capacity event (the bench's churn metric) must improve
+    # too — run lengths differ, so raw counts alone could mislead
+    churn0 = r0.manager.n_provisions / max(r0.n_capacity_events, 1)
+    churn1 = r1.manager.n_provisions / max(r1.n_capacity_events, 1)
+    assert churn1 < churn0
+    assert all(x.done for x in r1._step_requests)
+
+
+def test_zero_debounce_is_legacy():
+    """debounce 0.0 must not even arm a timer — legacy bit-identical."""
+    r = _flap_run(0.0)
+    assert r._provision_at is None
+    assert r.manager.fault_stats.n_provisions_debounced == 0
+
+
+def test_debounce_skip_accounting():
+    """Capacity that collapses while the timer is pending is CHURN the
+    debounce absorbed: the fire must count the provisions it skipped."""
+    r = _runner([TraceEvent(0.0, 0)], plan=None, provision_debounce_s=30.0)
+    r._provision_now = lambda target: None      # isolate the accounting
+    r._provision_target = 6                     # armed at the flap's peak
+    r._provision_at = r.loop.now
+    r.capacity = 2                              # ...collapsed since
+    r._provision_fire()
+    limit = r._instance_limit()
+    assert (r.manager.fault_stats.n_provisions_debounced
+            == 6 - min(r.capacity, limit))
+    assert r._provision_at is None              # timer disarmed
+
+
+# --------------------------------------------------------------------------- #
+# forward progress: reserved fallback under total spot blackout
+# --------------------------------------------------------------------------- #
+def test_blackout_completes_via_reserved_fallback():
+    r = _runner([TraceEvent(0.0, 4), TraceEvent(20.0, -4)],
+                plan=FaultPlan(seed=1, grace_s=5.0), seed=1,
+                n_prompts=12, mean_response=2000,
+                verify_invariants=True, liveness_window_s=600.0)
+    m = r.run(n_steps=1)
+    assert r.manager.fault_stats.n_reserved_fallbacks >= 1
+    assert all(x.done for x in r._step_requests)
+    assert m[-1]["step.tokens"] > 0
+
+
+def test_fallback_winds_down_when_spot_returns():
+    """Capacity returning mid-fallback hands the reserved chips back to
+    training: locals release, remotes take over, the step completes."""
+    r = _runner([TraceEvent(0.0, 4), TraceEvent(20.0, -4),
+                 TraceEvent(60.0, 4)],
+                plan=FaultPlan(seed=3, grace_s=5.0), seed=3,
+                n_prompts=12, mean_response=2000,
+                verify_invariants=True)
+    r.run(n_steps=1)
+    assert r.manager.fault_stats.n_reserved_fallbacks >= 1
+    assert not r._fallback_active
+    assert not r._locals
+
+
+# --------------------------------------------------------------------------- #
+# liveness invariants: unit semantics + runner auto-check
+# --------------------------------------------------------------------------- #
+class _StubManager:
+    def __init__(self):
+        self.n_duplicate_completions = 0
+        self.queued = []
+        self.instances = {}
+        self.n_preemptions = 0
+        self.n_migrations = 0
+        self.n_restarts = 0
+        self.fault_stats = FaultStats()
+
+
+def _req(i, created, completed):
+    r = Request(id=i, group=0, prompt_len=4, max_total=8,
+                created_at=created)
+    r.status = Status.DONE
+    r.completed_at = completed
+    return r
+
+
+def test_liveness_window_detects_gap():
+    reqs = [_req(0, 0.0, 5.0), _req(1, 0.0, 100.0)]
+    with pytest.raises(ChaosInvariantError, match="liveness"):
+        check_invariants(_StubManager(), reqs, liveness_window_s=50.0)
+    check_invariants(_StubManager(), reqs, liveness_window_s=95.1)
+
+
+def test_max_latency_detects_starvation():
+    reqs = [_req(0, 0.0, 5.0), _req(1, 2.0, 90.0)]
+    with pytest.raises(ChaosInvariantError, match="starvation"):
+        check_invariants(_StubManager(), reqs, max_latency_s=80.0)
+    check_invariants(_StubManager(), reqs, max_latency_s=88.0)
+
+
+def test_runner_verify_invariants_auto_check():
+    """verify_invariants=True wires check_invariants into run(): an
+    impossible liveness window must surface as ChaosInvariantError."""
+    r = _runner([TraceEvent(0.0, 2)], plan=FaultPlan(seed=0),
+                verify_invariants=True, liveness_window_s=1e-6)
+    with pytest.raises(ChaosInvariantError, match="liveness"):
+        r.run(n_steps=1)
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: the scenario matrix sweep
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("scenario", ["storm", "flap", "blackout",
+                                      "straggler"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_scenario_matrix_invariants(scenario, seed):
+    """5 seeds x 4 scenarios: every run completes every request exactly
+    once under the scenario's fault preset, with liveness held."""
+    kw = dict(duration=240.0)
+    if scenario == "blackout":
+        # land the blackout mid-step so the run MUST cross it
+        kw.update(blackout_s=120.0, at_frac=0.15)
+    trace = make_scenario(scenario, seed=seed, **kw)
+    plan = scenario_fault_plan(scenario, seed=seed)
+    stragglers = (StragglerConfig(window_s=2.0, patience=2,
+                                  quarantine_s=120.0, min_peers=3)
+                  if scenario == "straggler" else None)
+    r = _runner(trace, plan=plan, seed=seed, n_prompts=6, mean_response=600,
+                stragglers=stragglers, verify_invariants=True,
+                liveness_window_s=600.0, max_latency_s=1200.0,
+                provision_debounce_s=5.0 if scenario == "flap" else 0.0)
+    m = r.run(n_steps=1)
+    assert all(x.done for x in r._step_requests)
+    assert m[-1]["step.tokens"] > 0
+    if scenario == "straggler":
+        assert (r.manager.fault_stats.n_stragglers_flagged >= 0)
